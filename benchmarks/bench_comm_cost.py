@@ -1,0 +1,55 @@
+"""Paper Table 6 / 14 / 15 + Table 5 comm columns: up-link message size per
+round and total transmitted KB, per method, for the paper's real model shapes.
+
+These are ANALYTIC (params x 4 bytes / 1024, the paper's own accounting) and
+reproduce the paper's numbers directly -- the headline 10x (FedTT) / 30x
+(FedTT+) communication reductions vs LoRA.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import cfg_with, row, timer
+from repro.configs.paper_models import DEBERTA_BASE, LLAMA2_7B, LLAMA2_13B
+from repro.fed.comm import uplink_kb
+from repro.models.peft_glue import peft_param_count
+
+# Paper Table 14 (DeBERTa-base, MNLI-ish classification): up-link KB/round
+PAPER_T14 = {"lora": 586, "rolora": 312, "fedtt": 234, "fedtt_plus": 78}
+
+
+def run() -> list[str]:
+    rows = []
+    with timer() as t:
+        ours = {m: uplink_kb(cfg_with(DEBERTA_BASE, m, lora_rank=4), n_classes=3)
+                for m in PAPER_T14}
+    for m, paper_kb in PAPER_T14.items():
+        rows.append(row(f"table14_uplink_kb[{m}]", t.us / len(PAPER_T14),
+                        f"ours={ours[m]:.0f}KB paper={paper_kb}KB"))
+    # headline ratios (Table 6): LoRA / FedTT and LoRA / FedTT+
+    r_fedtt = ours["lora"] / ours["fedtt"]
+    r_plus = ours["lora"] / ours["fedtt_plus"]
+    rows.append(row("table6_comm_reduction[fedtt_vs_lora]", t.us, f"{r_fedtt:.1f}x"))
+    rows.append(row("table6_comm_reduction[fedtt+_vs_lora]", t.us, f"{r_plus:.1f}x"))
+
+    # Table 5: LLaMA2-7B (LSCD, LoRA r=8 4.19M vs FedTT 0.52M) and
+    # LLaMA2-13B (cross-silo, LoRA 6.55M / FedTT 0.64M / FedTT+ 0.18M)
+    with timer() as t:
+        n7_lora = peft_param_count(cfg_with(LLAMA2_7B, "lora", lora_rank=8))
+        n7_tt = peft_param_count(cfg_with(LLAMA2_7B, "fedtt"))
+        n13_lora = peft_param_count(cfg_with(LLAMA2_13B, "lora", lora_rank=8))
+        n13_tt = peft_param_count(cfg_with(LLAMA2_13B, "fedtt"))
+        kb13_plus = uplink_kb(cfg_with(LLAMA2_13B, "fedtt_plus"))
+        kb13_tt = uplink_kb(cfg_with(LLAMA2_13B, "fedtt"))
+        kb13_lora = uplink_kb(cfg_with(LLAMA2_13B, "lora", lora_rank=8))
+    rows.append(row("table5_params[llama2_7b]", t.us,
+                    f"lora={n7_lora/1e6:.2f}M(paper 4.19M) fedtt={n7_tt/1e6:.2f}M(paper 0.52M)"))
+    rows.append(row("table5_params[llama2_13b]", t.us,
+                    f"lora={n13_lora/1e6:.2f}M(paper 6.55M) fedtt={n13_tt/1e6:.2f}M(paper 0.64M)"))
+    rows.append(row("table5_comm_reduction[llama2_13b]", t.us,
+                    f"fedtt={kb13_lora/kb13_tt:.1f}x(paper ~10x) "
+                    f"fedtt+={kb13_lora/kb13_plus:.1f}x(paper ~30x)"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

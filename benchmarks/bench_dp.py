@@ -1,0 +1,29 @@
+"""Paper Table 4: differential-privacy guarantees (local DP-SGD).
+
+3 clients, eps in {1, 3, 6}, delta=1e-5, clip C=2 -- the paper's §5.6 setup.
+Validated claim: FedTT retains accuracy under DP better than LoRA at equal
+privacy budget (fewer trainable params -> less noise dimensions).
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import TASK, row, timer, tiny
+from repro.fed.simulate import run_federated
+
+
+def run(rounds: int = 10) -> list[str]:
+    rows = []
+    for eps in (6.0, 3.0, 1.0):
+        for m in ("fedtt", "lora", "ffa_lora"):
+            with timer() as t:
+                res = run_federated(
+                    tiny(m), TASK, n_clients=3, n_rounds=rounds, local_steps=2,
+                    batch_size=16, train_per_client=64, eval_n=160, lr=1e-2,
+                    dp_eps=eps, dp_delta=1e-5, dp_clip=2.0, seed=2)
+            rows.append(row(f"table4_acc[eps={eps:g}][{m}]", t.us / rounds,
+                            f"best_acc={res.best_acc:.3f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

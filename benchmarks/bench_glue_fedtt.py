@@ -1,0 +1,60 @@
+"""Paper Table 1 / 2: federated PEFT method comparison (cross-silo, iid).
+
+Runs the full federated protocol (5 clients, 1 local epoch equivalent) on the
+synthetic classification task with the tiny encoder; reports best validation
+accuracy and trainable-parameter counts for the paper's DeBERTa-base shapes.
+
+The validated claims: (i) FedTT reaches accuracy comparable to LoRA with ~3-5x
+fewer trainable/communicated params, (ii) the param-count column of Table 1
+matches analytically for the real DeBERTa-base shapes.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import TASK, cfg_with, row, timer, tiny
+from repro.configs.paper_models import DEBERTA_BASE
+from repro.fed.simulate import run_federated
+from repro.models.peft_glue import peft_param_count
+
+# Table 1 "# Param." column (DeBERTa-base)
+PAPER_PARAMS_M = {"lora": 0.15, "bitfit": 0.10, "prompt": 0.01,
+                  "fedtt": 0.06, "fedtt_plus": 0.02}
+
+METHODS = ("fedtt", "fedtt_plus", "lora", "ffa_lora", "rolora",
+           "bitfit", "adapter", "prompt")
+
+ROUNDS = 15
+
+
+def run(rounds: int = ROUNDS) -> list[str]:
+    rows = []
+    for m in PAPER_PARAMS_M:
+        n = peft_param_count(cfg_with(DEBERTA_BASE, m, lora_rank=4), n_classes=2)
+        rows.append(row(f"table1_params[{m}]", 0.0,
+                        f"ours={n/1e6:.3f}M paper={PAPER_PARAMS_M[m]}M"))
+    for m in METHODS:
+        with timer() as t:
+            res = run_federated(
+                tiny(m), TASK, n_clients=5, n_rounds=rounds, local_steps=2,
+                batch_size=32, train_per_client=96, eval_n=160, lr=1e-2, seed=0)
+        # Table 14 protocol: rounds to reach 95% of the method's best accuracy
+        target = 0.95 * res.best_acc
+        r95 = next(i + 1 for i, a in enumerate(res.acc_history) if a >= target)
+        kb = res.comm.uplink_kb_per_round[0]
+        rows.append(row(f"table1_acc[{m}]", t.us / rounds,
+                        f"best_acc={res.best_acc:.3f} rounds_to_95pct={r95} "
+                        f"total_to_target={kb*r95:.0f}KB"))
+    # Table 2 protocol: large-scale cross-device (client subset per round)
+    for m in ("fedtt", "lora"):
+        with timer() as t:
+            res = run_federated(
+                tiny(m), TASK, n_clients=40, n_rounds=rounds, local_steps=2,
+                batch_size=32, train_per_client=32, eval_n=160, lr=1e-2,
+                client_fraction=0.25, seed=0)
+        rows.append(row(f"table2_lscd_acc[{m}]", t.us / rounds,
+                        f"best_acc={res.best_acc:.3f} (40 clients, 10/round)"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,95 @@
+"""Paper Table 3 / 13 + Fig. 2: robustness to data heterogeneity.
+
+Protocol (Appendix B): 3 clients, explicit label-skew splits (iid / mild /
+severe), multiple local updates to amplify client drift.  Validated claim:
+FedTT+ degrades least under severe heterogeneity (ordering
+fedtt_plus >= fedtt > lora in the severe column), because frozen factors
+remove the Eq. 2 aggregation cross-terms.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import TASK, row, timer, tiny
+from repro.data.synthetic import PAPER_SPLITS
+from repro.fed.simulate import run_federated
+
+SETTINGS = {
+    "iid": None,
+    "mild": PAPER_SPLITS[("mild", 2)],
+    "severe": PAPER_SPLITS[("severe", 2)],
+}
+
+METHODS = ("fedtt", "fedtt_plus", "lora", "ffa_lora", "rolora")
+
+
+def eq2_interference(method: str, props, local_steps: int = 20,
+                     lr: float = 2e-2, seed: int = 3) -> float:
+    """The paper's Eq. 2 mechanism, measured directly: after K local steps on
+    label-skewed shards, compare FedAvg-of-factors vs FedAvg-of-products for
+    the first adapter's down-chain:  || W(mean G_i) - mean W(G_i) || / ||.||.
+    FedTT+ freezes all but {G_1, G_r, G_J}, removing most cross-terms."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.tt import tt_reconstruct
+    from repro.data.synthetic import label_skew_partition
+    from repro.fed.client import local_step_classify
+    from repro.fed.rounds import trainable_mask
+    from repro.models.peft_glue import adapter_spec
+    from repro.models.transformer import classifier_init, model_init
+    from repro.optim import adamw
+    import numpy as np
+
+    cfg = tiny(method)
+    params = model_init(jax.random.key(seed), cfg)
+    trainable = {"peft": params["peft"],
+                 "classifier": classifier_init(jax.random.key(seed + 1), cfg, 2)}
+    opt = adamw(lr)
+    mask = trainable_mask(trainable, cfg, 0)
+    pool = TASK.sample(3 * 96, seed_offset=5)
+    shards = label_skew_partition(np.asarray(pool["labels"]), 3,
+                                  proportions=props, seed=seed)
+    rng = np.random.default_rng(seed)
+    client_factors = []
+    for ci in range(3):
+        tr, st = trainable, opt.init(trainable)
+        for _ in range(local_steps):
+            idx = rng.choice(shards[ci], size=32,
+                             replace=len(shards[ci]) < 32)
+            batch = jax.tree.map(lambda x: x[idx], pool)
+            tr, st, _ = local_step_classify(tr, st, params["backbone"], batch,
+                                            mask, cfg=cfg, n_classes=2,
+                                            optimizer=opt)
+        client_factors.append(
+            [f[0] for f in tr["peft"]["blocks"]["adapter_attn"]["down"]])
+    spec = adapter_spec(cfg).down
+    avg_factors = [sum(c[j] for c in client_factors) / 3
+                   for j in range(spec.order)]
+    w_of_avg = tt_reconstruct(avg_factors, spec)
+    avg_of_w = sum(tt_reconstruct(c, spec) for c in client_factors) / 3
+    return float(jnp.linalg.norm(w_of_avg - avg_of_w)
+                 / (jnp.linalg.norm(avg_of_w) + 1e-12))
+
+
+def run(rounds: int = 12, local_steps: int = 6) -> list[str]:
+    rows = []
+    for dist_name, props in SETTINGS.items():
+        for m in METHODS:
+            with timer() as t:
+                res = run_federated(
+                    tiny(m), TASK, n_clients=3, n_rounds=rounds,
+                    local_steps=local_steps, batch_size=32,
+                    train_per_client=96, eval_n=160, lr=1e-2,
+                    hetero_proportions=props, seed=1)
+            rows.append(row(f"table3_acc[{dist_name}][{m}]", t.us / rounds,
+                            f"best_acc={res.best_acc:.3f}"))
+    # Eq. 2 mechanism: the aggregation-interference norm FedTT+ exists to fix
+    for m in ("fedtt", "fedtt_plus"):
+        with timer() as t:
+            rel = eq2_interference(m, SETTINGS["severe"])
+        rows.append(row(f"eq2_interference[severe][{m}]", t.us,
+                        f"rel_norm={rel:.4f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,70 @@
+"""Kernel micro-benchmark: TT contraction vs dense matvec.
+
+Reports (i) wall us_per_call on CPU (interpret-mode Pallas vs jnp reference vs
+dense matmul -- CPU numbers are NOT TPU predictions, the derived FLOP/byte
+ratios are the portable quantity), (ii) the analytic FLOP and parameter-byte
+ratios that make the TT adapter cheap (paper §3.2).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timer
+from repro.core.tt import make_tt_spec, tt_init, tt_matvec
+from repro.kernels.ops import tt_linear
+
+
+def _flops_tt(spec, batch):
+    total = 0
+    r = spec.ranks
+    # fold input cores then expand output cores (see core/tt.py)
+    rest = spec.in_dim
+    for j in range(spec.split):
+        rest //= spec.core_dims[j]
+        total += 2 * batch * rest * r[j] * spec.core_dims[j] * r[j + 1]
+    pre = 1
+    for j in range(spec.split, spec.order):
+        total += 2 * batch * pre * r[j] * spec.core_dims[j] * r[j + 1]
+        pre *= spec.core_dims[j]
+    return total
+
+
+def run(batch: int = 4096, reps: int = 5) -> list[str]:
+    rows = []
+    for (p, q) in [(768, 64), (4096, 64)]:
+        spec = make_tt_spec(p, q, 5)
+        fs = tuple(tt_init(jax.random.key(0), spec, zero_last=False))
+        x = jax.random.normal(jax.random.key(1), (batch, p))
+        w = jax.random.normal(jax.random.key(2), (p, q)) / jnp.sqrt(p)
+
+        jf = jax.jit(lambda x: tt_matvec(fs, spec, x))
+        jd = jax.jit(lambda x: x @ w)
+        jk = jax.jit(lambda x: tt_linear(x, fs, spec))
+        for f in (jf, jd, jk):
+            f(x).block_until_ready()
+
+        with timer() as t_tt:
+            for _ in range(reps):
+                jf(x).block_until_ready()
+        with timer() as t_d:
+            for _ in range(reps):
+                jd(x).block_until_ready()
+        with timer() as t_k:
+            for _ in range(reps):
+                jk(x).block_until_ready()
+
+        fl_tt = _flops_tt(spec, batch)
+        fl_d = 2 * batch * p * q
+        rows.append(row(f"kernel_tt_contract[{p}x{q}][jnp]", t_tt.us / reps,
+                        f"flops_ratio_dense/tt={fl_d/fl_tt:.2f}"))
+        rows.append(row(f"kernel_tt_contract[{p}x{q}][dense]", t_d.us / reps,
+                        f"param_bytes_ratio={spec.dense_params/spec.n_params:.0f}x"))
+        rows.append(row(f"kernel_tt_contract[{p}x{q}][pallas-interp]",
+                        t_k.us / reps, "oracle-validated"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,44 @@
+"""Roofline summary benchmark: reads the dry-run JSON artifacts
+(results/dryrun_single_pod.json) and prints the per-(arch x shape) roofline
+terms as CSV rows.  Run the dry-run first:
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all --json results/dryrun_single_pod.json
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import row
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun_single_pod.json")
+
+
+def run() -> list[str]:
+    rows = []
+    if not os.path.exists(RESULTS):
+        rows.append(row("roofline[missing]", 0.0,
+                        "run repro.launch.dryrun --all --json first"))
+        return rows
+    with open(RESULTS) as f:
+        data = json.load(f)
+    for r in data:
+        name = f"roofline[{r['arch']}][{r['shape']}]"
+        if "error" in r:
+            rows.append(row(name, 0.0, f"ERROR:{r['error'][:60]}"))
+        elif "skipped" in r:
+            rows.append(row(name, 0.0, f"skipped:{r['skipped'][:50]}"))
+        else:
+            step_ms = max(r["t_compute"], r["t_memory"], r["t_collective"]) * 1e3
+            rows.append(row(
+                name, step_ms * 1e3,
+                f"dom={r['dominant']} compute={r['t_compute']*1e3:.1f}ms "
+                f"memory={r['t_memory']*1e3:.1f}ms coll={r['t_collective']*1e3:.1f}ms "
+                f"mem/dev={(r.get('peak_memory') or 0)/2**30:.1f}GiB"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,52 @@
+"""Shared benchmark helpers.
+
+Every benchmark prints ``name,us_per_call,derived`` CSV rows (one per paper
+table row it reproduces).  `derived` carries the table's own metric
+(accuracy, KB, param count, ratio).
+
+Fidelity note (DESIGN.md §7): GLUE/SuperGLUE and pretrained checkpoints are
+unavailable offline; accuracy-bearing benchmarks run the full federated
+protocol on synthetic separable classification tasks with a tiny encoder of
+the same block structure.  Parameter counts and communication KB are computed
+for the paper's real model shapes and match the paper analytically.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.configs.base import ModelConfig, PEFTConfig
+from repro.configs.paper_models import TINY_ENCODER
+from repro.data.synthetic import ClassificationTask
+
+
+def row(name: str, us_per_call: float, derived) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line)
+    return line
+
+
+def cfg_with(base: ModelConfig, method: str, **peft_kw) -> ModelConfig:
+    return dataclasses.replace(base, peft=PEFTConfig(method=method, **peft_kw))
+
+
+def tiny(method: str, **kw) -> ModelConfig:
+    return cfg_with(TINY_ENCODER, method, **kw)
+
+
+TASK = ClassificationTask(n_classes=2, vocab=256, seq_len=32, seed=0, signal=0.5)
+TASK3 = ClassificationTask(n_classes=3, vocab=256, seq_len=32, seed=1, signal=0.5)
+
+
+class timer:
+    def __enter__(self):
+        self.t0 = time.time()
+        return self
+
+    def __exit__(self, *a):
+        self.dt = time.time() - self.t0
+
+    @property
+    def us(self) -> float:
+        return self.dt * 1e6

@@ -1,0 +1,47 @@
+"""Benchmark harness -- one module per paper table (DESIGN.md §7 index).
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run --only comm_cost,kernel
+
+Prints ``name,us_per_call,derived`` CSV rows.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from benchmarks import (bench_comm_cost, bench_dp, bench_extensions,
+                        bench_glue_fedtt, bench_heterogeneity, bench_kernel,
+                        bench_rank_sweep, bench_roofline)
+
+SUITES = {
+    "comm_cost": bench_comm_cost.run,        # Tables 5, 6, 14, 15
+    "kernel": bench_kernel.run,              # §3.2 contraction economics
+    "rank_sweep": bench_rank_sweep.run,      # Table 7
+    "glue_fedtt": bench_glue_fedtt.run,      # Tables 1, 2
+    "heterogeneity": bench_heterogeneity.run,  # Tables 3, 13, Fig. 2
+    "dp": bench_dp.run,                      # Table 4
+    "roofline": bench_roofline.run,          # §Roofline (reads dry-run JSON)
+    "extensions": bench_extensions.run,      # beyond-paper: hetero-rank + int8
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names " + ",".join(SUITES))
+    args = ap.parse_args(argv)
+    picks = args.only.split(",") if args.only else list(SUITES)
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in picks:
+        print(f"# --- {name} ---")
+        SUITES[name]()
+    print(f"# total {time.time()-t0:.1f}s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,63 @@
+"""Quickstart: tensorized (TT) adapters in 60 seconds.
+
+Builds a TT adapter for a 768-wide layer, shows the paper's compression
+numbers, runs a forward/backward, and fine-tunes a 2-layer encoder's adapters
+on a toy task.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import PEFTConfig
+from repro.configs.paper_models import TINY_ENCODER
+from repro.core.adapters import AdapterSpec, adapter_apply, adapter_init
+from repro.core.tt import make_tt_spec
+from repro.models.transformer import model_init
+from repro.optim import adamw, apply_updates
+from repro.train.step import lm_loss
+
+# --- 1. the tensorized linear layer (paper §3.2) ---------------------------
+spec = make_tt_spec(768, 64, rank=5)
+print(f"TT(768x64, rank 5): cores {spec.core_dims}, "
+      f"{spec.n_params} params vs {spec.dense_params} dense "
+      f"({spec.compression:.0f}x compression)")
+
+# --- 2. a tensorized adapter (two TT layers + GELU, residual) --------------
+aspec = AdapterSpec(d_model=768, bottleneck=64, tt_rank=5)
+adapter = adapter_init(jax.random.key(0), aspec)
+x = jax.random.normal(jax.random.key(1), (4, 16, 768))
+y = adapter_apply(adapter, aspec, x)
+print(f"adapter: {aspec.n_params} trainable params; "
+      f"output==input at init: {bool(jnp.allclose(y, x))}")
+
+# --- 3. fine-tune only the adapters of a small encoder ---------------------
+cfg = dataclasses.replace(TINY_ENCODER, peft=PEFTConfig(method="fedtt"))
+params = model_init(jax.random.key(2), cfg)
+opt = adamw(5e-3)
+opt_state = opt.init(params["peft"])
+batch = {
+    "embeds": jax.random.normal(jax.random.key(3), (8, 16, cfg.d_model)),
+    "labels": jax.random.randint(jax.random.key(4), (8, 16), 0, cfg.vocab),
+}
+
+
+@jax.jit
+def step(peft, opt_state):
+    def loss_fn(p):
+        return lm_loss({"backbone": params["backbone"], "peft": p}, cfg, batch)
+    (loss, _), grads = jax.value_and_grad(loss_fn, has_aux=True)(peft)
+    updates, opt_state = opt.update(grads, opt_state, peft)
+    return apply_updates(peft, updates), opt_state, loss
+
+
+peft = params["peft"]
+for i in range(30):
+    peft, opt_state, loss = step(peft, opt_state)
+    if i % 10 == 0:
+        print(f"step {i:2d}: loss {float(loss):.4f}")
+print(f"final loss {float(loss):.4f} (memorizing a fixed batch through "
+      f"adapters only)")

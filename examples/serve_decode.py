@@ -1,0 +1,47 @@
+"""Batched serving example: KV-cache decode with a TT-adapted model.
+
+Prefills a batch of prompts, then decodes tokens autoregressively with the
+ring-buffer KV cache (the decode_32k / long_500k path of the dry-run, at toy
+scale -- including a sliding-window arch whose cache is a ring buffer).
+
+    PYTHONPATH=src python examples/serve_decode.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import get_config
+from repro.models.transformer import init_cache, model_decode_step, model_init
+
+ARCH = "mixtral_8x22b"          # smoke variant: SWA ring-buffer cache
+B, PROMPT, GEN = 4, 24, 40
+
+cfg = get_config(ARCH, smoke=True)
+params = model_init(jax.random.key(0), cfg)
+prompts = jax.random.randint(jax.random.key(1), (B, PROMPT), 0, cfg.vocab)
+
+cache = init_cache(cfg, B, PROMPT + GEN)
+step = jax.jit(lambda p, t, pos, c: model_decode_step(p, cfg, t, pos, c))
+
+# prefill token-by-token through the decode path (toy scale)
+t0 = time.time()
+for t in range(PROMPT):
+    logits, cache = step(params, prompts[:, t], jnp.full((B,), t, jnp.int32), cache)
+
+# sample greedily
+tok = jnp.argmax(logits, -1).astype(jnp.int32)
+out = [tok]
+for t in range(PROMPT, PROMPT + GEN - 1):
+    logits, cache = step(params, tok, jnp.full((B,), t, jnp.int32), cache)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    out.append(tok)
+gen = jnp.stack(out, axis=1)
+dt = time.time() - t0
+print(f"arch={cfg.name} (SWA window {cfg.swa_window}, ring-buffer cache)")
+print(f"served batch={B}: {PROMPT} prompt + {GEN} generated tokens "
+      f"in {dt:.1f}s ({B*GEN/dt:.1f} tok/s on CPU)")
+print("first sequence:", gen[0][:16].tolist(), "...")
+assert bool(jnp.all(jnp.isfinite(logits)))
+print("OK")

@@ -1,0 +1,56 @@
+"""Render results/*.json into the EXPERIMENTS.md roofline tables."""
+
+import json
+import sys
+
+
+def fmt_ms(x):
+    return f"{x*1e3:.1f}"
+
+
+def table(path, chips):
+    with open(path) as f:
+        data = json.load(f)
+    lines = ["| arch | shape | dom | compute ms | memory ms | collective ms | mem/dev GiB | useful-FLOP frac |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in data:
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                         f"skip: {r['skipped'][:45]} |")
+            continue
+        if "error" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | ERROR | | | | | {r['error'][:40]} |")
+            continue
+        mem = (r.get("peak_memory") or 0) / 2**30
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | **{r['dominant']}** | "
+            f"{fmt_ms(r['t_compute'])} | {fmt_ms(r['t_memory'])} | "
+            f"{fmt_ms(r['t_collective'])} | {mem:.1f} | "
+            f"{r.get('useful_flops_frac', 0):.2f} |")
+    return "\n".join(lines)
+
+
+def hillclimb_table(path):
+    with open(path) as f:
+        data = json.load(f)
+    lines = ["| experiment | compute ms | memory ms | collective ms | mem/dev GiB | dom |",
+             "|---|---|---|---|---|---|"]
+    for r in data:
+        mem = (r.get("peak_memory") or 0) / 2**30
+        lines.append(f"| {r['tag']} | {fmt_ms(r['t_compute'])} | "
+                     f"{fmt_ms(r['t_memory'])} | {fmt_ms(r['t_collective'])} | "
+                     f"{mem:.2f} | {r['dominant']} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "sp"):
+        print("### Single-pod (16x16)\n")
+        print(table("results/dryrun_single_pod.json", 256))
+    if which in ("all", "mp"):
+        print("\n### Multi-pod (2x16x16)\n")
+        print(table("results/dryrun_multi_pod.json", 512))
+    if which in ("all", "hc"):
+        print("\n### Hillclimb\n")
+        print(hillclimb_table("results/hillclimb.json"))

@@ -1,0 +1,198 @@
+"""Config system: model/arch configs, input shapes, PEFT settings, registry.
+
+Every assigned architecture gets one module in this package defining a
+``CONFIG`` (full size, exercised only via the dry-run) and a ``SMOKE``
+(reduced: <=2 layers, d_model<=512, <=4 experts) variant of the same family.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import math
+from typing import Literal
+
+Family = Literal["dense", "moe", "ssm", "hybrid", "vlm", "audio"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int          # per-expert FFN inner dim
+    capacity_factor: float = 1.25   # smoke configs use 8.0 (dropless)
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 16      # mamba1 state dim per channel
+    d_conv: int = 4
+    expand: int = 2        # d_inner = expand * d_model
+    dt_rank: int | None = None   # None -> ceil(d_model / 16)
+    chunk: int = 256       # time-chunk for the associative scan (perf knob)
+    scan_bf16: bool = False  # store dA/dBx scan elements in bf16 (perf knob;
+                             # the inter-chunk carry stays f32)
+    inner_remat: bool = True  # jax.checkpoint each time-chunk (perf knob)
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style: pattern of RG-LRU vs local-attention blocks."""
+    lru_width: int = 0               # 0 -> d_model
+    attn_every: int = 3              # 1 attention block per `attn_every` blocks (1:2 ratio)
+    local_window: int = 2048
+
+
+@dataclasses.dataclass(frozen=True)
+class PEFTConfig:
+    method: str = "fedtt"            # one of core.peft.PEFT_METHODS
+    tt_rank: int = 5
+    bottleneck: int = 64
+    lora_rank: int = 8
+    lora_alpha: float = 16.0
+    prompt_tokens: int = 20
+    use_kernel: bool = False         # Pallas fused TT adapter
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: Family
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int | None = None     # None -> d_model // n_heads
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    swa_window: int | None = None   # sliding-window attention (Mixtral)
+    rope_theta: float = 1e6
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    source: str = ""                # citation bracket from the assignment
+    moe: MoEConfig | None = None
+    ssm: SSMConfig | None = None
+    hybrid: HybridConfig | None = None
+    cross_attn_every: int = 0       # vlm: cross-attn layer every k layers
+    n_image_tokens: int = 1601      # vlm stub frontend output length
+    encoder_only: bool = False      # audio: no causal mask, no decode
+    n_frames: int = 1024            # audio stub frontend output length
+    gated_mlp: bool = True          # SwiGLU (3 mats) vs classic GELU MLP (2 mats)
+    peft: PEFTConfig = dataclasses.field(default_factory=PEFTConfig)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Can this arch run 500k-token decode? (SSM/hybrid/SWA only.)"""
+        return self.family in ("ssm", "hybrid") or self.swa_window is not None
+
+    def param_count(self) -> int:
+        """Analytic backbone parameter count (embeddings + blocks + head)."""
+        d, h, kv, hd, f = self.d_model, self.n_heads, self.n_kv_heads, self.hd, self.d_ff
+
+        def attn_params() -> int:
+            p = d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+            if self.qkv_bias:
+                p += (h + 2 * kv) * hd
+            if self.qk_norm:
+                p += 2 * hd
+            return p
+
+        def mlp_params() -> int:
+            n_mats = 3 if self.gated_mlp else 2
+            if self.moe is not None:
+                return d * self.moe.n_experts + self.moe.n_experts * n_mats * d * self.moe.d_expert
+            return n_mats * d * f
+
+        def ssm_params() -> int:
+            s = self.ssm or SSMConfig()
+            d_in = s.expand * d
+            dtr = s.dt_rank or math.ceil(d / 16)
+            return (d * 2 * d_in                    # in_proj (x and z branches)
+                    + d_in * s.d_conv               # depthwise conv
+                    + d_in * (dtr + 2 * s.d_state)  # x_proj -> (dt, B, C)
+                    + dtr * d_in + d_in             # dt_proj
+                    + d_in * s.d_state + d_in       # A_log, D
+                    + d_in * d)                     # out_proj
+
+        blocks = 0
+        for layer in range(self.n_layers):
+            if self.family == "ssm":
+                blocks += ssm_params() + d
+                continue
+            if self.family == "hybrid":
+                hy = self.hybrid or HybridConfig()
+                w = hy.lru_width or d
+                if (layer + 1) % hy.attn_every == 0:
+                    mixer = attn_params()
+                else:
+                    # RG-LRU block: input/gate projections + recurrence gates
+                    mixer = 2 * d * w + 2 * w * w // 8 + 2 * w + w * d
+                blocks += mixer + mlp_params() + 2 * d
+                continue
+            blocks += attn_params() + mlp_params() + 2 * d
+            if self.cross_attn_every and (layer + 1) % self.cross_attn_every == 0:
+                blocks += attn_params() + 2 * d     # gated cross-attn layer
+
+        emb = self.vocab * d
+        head = 0 if (self.tie_embeddings or self.encoder_only) else self.vocab * d
+        return emb + blocks + d + head
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: only top_k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        full = self.param_count()
+        n_mats = 3 if self.gated_mlp else 2
+        inactive = (self.moe.n_experts - self.moe.top_k) * n_mats * self.d_model * self.moe.d_expert
+        return full - self.n_layers * inactive
+
+
+# ---------------------------------------------------------------------------
+# Input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: Literal["train", "prefill", "decode"]
+
+
+INPUT_SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+ARCH_IDS = (
+    "mixtral_8x22b", "qwen3_moe_235b_a22b", "qwen3_4b", "command_r_plus_104b",
+    "qwen3_8b", "recurrentgemma_9b", "falcon_mamba_7b", "llama_3_2_vision_11b",
+    "qwen2_5_32b", "hubert_xlarge",
+)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    arch = arch.replace("-", "_").replace(".", "_")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def shape_applicable(cfg: ModelConfig, shape: InputShape) -> tuple[bool, str]:
+    """Whether (arch, shape) runs; reason string when skipped (DESIGN.md §4)."""
+    if cfg.encoder_only and shape.kind == "decode":
+        return False, "encoder-only: no autoregressive decode step"
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "full quadratic attention: 500k decode out of scope"
+    return True, ""

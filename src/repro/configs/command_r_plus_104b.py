@@ -1,0 +1,33 @@
+"""Command R+ 104B [dense] — GQA, no-bias.  [hf:CohereForAI/c4ai-command-r-v01]
+Assigned spec: 64L d_model=12288 96H (GQA kv=8) d_ff=33792 vocab=256000.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="command-r-plus-104b",
+    family="dense",
+    n_layers=64,
+    d_model=12288,
+    n_heads=96,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=33792,
+    vocab=256000,
+    qkv_bias=False,
+    rope_theta=75e6,
+    source="[hf:CohereForAI/c4ai-command-r-v01]",
+)
+
+SMOKE = ModelConfig(
+    name="command-r-plus-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=768,
+    vocab=512,
+    source="[hf:CohereForAI/c4ai-command-r-v01]",
+)

@@ -1,0 +1,33 @@
+"""Falcon-Mamba-7B [ssm] — attention-free Mamba-1.  [arXiv:2410.05355]
+Assigned spec: 64L d_model=4096 (attn-free) d_ff=0 vocab=65024, ssm_state=16.
+"""
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family="ssm",
+    n_layers=64,
+    d_model=4096,
+    n_heads=1,          # unused (attention-free)
+    n_kv_heads=1,
+    head_dim=64,
+    d_ff=0,
+    vocab=65024,
+    ssm=SSMConfig(d_state=16, d_conv=4, expand=2, chunk=512),
+    source="[arXiv:2410.05355]",
+)
+
+SMOKE = ModelConfig(
+    name="falcon-mamba-smoke",
+    family="ssm",
+    n_layers=2,
+    d_model=256,
+    n_heads=1,
+    n_kv_heads=1,
+    head_dim=64,
+    d_ff=0,
+    vocab=512,
+    ssm=SSMConfig(d_state=8, d_conv=4, expand=2),
+    source="[arXiv:2410.05355]",
+)

@@ -1,0 +1,43 @@
+"""HuBERT-XLarge [audio] — encoder-only transformer backbone.
+
+[arXiv:2106.07447] (HuBERT; same backbone as wav2vec2).  The mel-spectrogram
++ conv feature extractor frontend is a STUB per the assignment carve-out:
+``input_specs()`` supplies precomputed frame embeddings (batch, n_frames, d).
+vocab=504 is the masked-prediction codebook size.  Encoder-only: no decode
+shapes (DESIGN.md §4).  Original uses a non-gated GELU MLP.
+Assigned spec: 48L d_model=1280 16H (kv=16, i.e. full MHA) d_ff=5120.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="hubert-xlarge",
+    family="audio",
+    n_layers=48,
+    d_model=1280,
+    n_heads=16,
+    n_kv_heads=16,
+    head_dim=80,
+    d_ff=5120,
+    vocab=504,
+    encoder_only=True,
+    gated_mlp=False,
+    n_frames=1024,
+    source="[arXiv:2106.07447]",
+)
+
+SMOKE = ModelConfig(
+    name="hubert-smoke",
+    family="audio",
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=4,
+    head_dim=64,
+    d_ff=512,
+    vocab=104,
+    encoder_only=True,
+    gated_mlp=False,
+    n_frames=64,
+    source="[arXiv:2106.07447]",
+)

@@ -1,0 +1,41 @@
+"""Llama-3.2-Vision-11B [vlm] — decoder with gated cross-attention image layers.
+
+[hf:meta-llama/Llama-3.2-11B-Vision].  The vision frontend (ViT + projector)
+is a STUB per the assignment carve-out: ``input_specs()`` supplies precomputed
+patch embeddings of shape (batch, n_image_tokens=1601, d_model).
+Assigned spec: 40L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256,
+cross-attn every 5th layer (8 image layers).
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=14336,
+    vocab=128256,
+    rope_theta=5e5,
+    cross_attn_every=5,
+    n_image_tokens=1601,
+    source="[hf:meta-llama/Llama-3.2-11B-Vision]",
+)
+
+SMOKE = ModelConfig(
+    name="llama-vision-smoke",
+    family="vlm",
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    vocab=512,
+    cross_attn_every=2,
+    n_image_tokens=17,
+    source="[hf:meta-llama/Llama-3.2-11B-Vision]",
+)

@@ -1,0 +1,40 @@
+"""Mixtral-8x22B [moe] — 8 experts top-2, sliding-window attention.
+
+[arXiv:2401.04088] (Mixtral of Experts; 8x22B scales the 8x7B recipe).
+Assigned spec: 56L d_model=6144 48H (GQA kv=8) d_ff=16384 vocab=32768,
+MoE 8e top-2, SWA.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig, PEFTConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    n_layers=56,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=16384,
+    vocab=32768,
+    swa_window=4096,
+    rope_theta=1e6,
+    moe=MoEConfig(n_experts=8, top_k=2, d_expert=16384),
+    source="[arXiv:2401.04088]",
+)
+
+SMOKE = ModelConfig(
+    name="mixtral-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    vocab=512,
+    swa_window=64,
+    moe=MoEConfig(n_experts=4, top_k=2, d_expert=512, capacity_factor=8.0),
+    peft=PEFTConfig(),
+    source="[arXiv:2401.04088]",
+)

@@ -1,0 +1,51 @@
+"""Configs for the paper's own models (Tables 1-7): BERT-family encoders and
+LLaMA-2 decoders.  Encoders use non-gated GELU MLPs and full MHA, as in the
+originals.  Used by the GLUE-style federated benchmarks; full-size LLaMA-2
+variants additionally feed the analytic communication-cost benchmark.
+"""
+
+from repro.configs.base import ModelConfig
+
+DEBERTA_BASE = ModelConfig(
+    name="deberta-base", family="audio",  # encoder-only path reuses audio family plumbing
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+    d_ff=3072, vocab=50265, encoder_only=True, gated_mlp=False,
+    source="[He et al. 2020]",
+)
+
+ROBERTA_BASE = ModelConfig(
+    name="roberta-base", family="audio",
+    n_layers=12, d_model=768, n_heads=12, n_kv_heads=12, head_dim=64,
+    d_ff=3072, vocab=50265, encoder_only=True, gated_mlp=False,
+    source="[Liu et al. 2019]",
+)
+
+ROBERTA_LARGE = ModelConfig(
+    name="roberta-large", family="audio",
+    n_layers=24, d_model=1024, n_heads=16, n_kv_heads=16, head_dim=64,
+    d_ff=4096, vocab=50265, encoder_only=True, gated_mlp=False,
+    source="[Liu et al. 2019]",
+)
+
+LLAMA2_7B = ModelConfig(
+    name="llama2-7b", family="dense",
+    n_layers=32, d_model=4096, n_heads=32, n_kv_heads=32, head_dim=128,
+    d_ff=11008, vocab=32000, rope_theta=1e4,
+    source="[Touvron et al. 2023]",
+)
+
+LLAMA2_13B = ModelConfig(
+    name="llama2-13b", family="dense",
+    n_layers=40, d_model=5120, n_heads=40, n_kv_heads=40, head_dim=128,
+    d_ff=13824, vocab=32000, rope_theta=1e4,
+    source="[Touvron et al. 2023]",
+)
+
+# Tiny encoder used by federated accuracy benchmarks (trains in seconds on CPU
+# while preserving the DeBERTa/RoBERTa block structure).
+TINY_ENCODER = ModelConfig(
+    name="tiny-encoder", family="audio",
+    n_layers=2, d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+    d_ff=128, vocab=256, encoder_only=True, gated_mlp=False,
+    source="[benchmark stand-in]",
+)

@@ -1,0 +1,34 @@
+"""Qwen2.5-32B [dense] — GQA with QKV bias.  [hf:Qwen/Qwen2.5-0.5B family]
+Assigned spec: 64L d_model=5120 40H (GQA kv=8) d_ff=27648 vocab=152064.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen2.5-32b",
+    family="dense",
+    n_layers=64,
+    d_model=5120,
+    n_heads=40,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=27648,
+    vocab=152064,
+    qkv_bias=True,
+    rope_theta=1e6,
+    source="[hf:Qwen/Qwen2.5-0.5B]",
+)
+
+SMOKE = ModelConfig(
+    name="qwen2.5-32b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=320,
+    n_heads=5,
+    n_kv_heads=1,
+    head_dim=64,
+    d_ff=640,
+    vocab=512,
+    qkv_bias=True,
+    source="[hf:Qwen/Qwen2.5-0.5B]",
+)

@@ -1,0 +1,34 @@
+"""Qwen3-4B [dense] — qk_norm, GQA.  [hf:Qwen/Qwen3-8B family]
+Assigned spec: 36L d_model=2560 32H (GQA kv=8) d_ff=9728 vocab=151936.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-4b",
+    family="dense",
+    n_layers=36,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=9728,
+    vocab=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+    source="[hf:Qwen/Qwen3-8B]",
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-4b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=512,
+    vocab=512,
+    qk_norm=True,
+    source="[hf:Qwen/Qwen3-8B]",
+)

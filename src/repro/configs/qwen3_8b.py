@@ -1,0 +1,34 @@
+"""Qwen3-8B [dense] — qk_norm, GQA.  [hf:Qwen/Qwen3-8B]
+Assigned spec: 36L d_model=4096 32H (GQA kv=8) d_ff=12288 vocab=151936.
+"""
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-8b",
+    family="dense",
+    n_layers=36,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=128,
+    d_ff=12288,
+    vocab=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+    source="[hf:Qwen/Qwen3-8B]",
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-8b-smoke",
+    family="dense",
+    n_layers=2,
+    d_model=320,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=640,
+    vocab=512,
+    qk_norm=True,
+    source="[hf:Qwen/Qwen3-8B]",
+)

@@ -1,0 +1,39 @@
+"""Qwen3-MoE-235B-A22B [moe] — 128 experts top-8, qk_norm.
+
+[hf:Qwen/Qwen3-30B-A3B] (same family recipe at 235B-A22B scale).
+Assigned spec: 94L d_model=4096 64H (GQA kv=4) d_ff=1536 vocab=151936,
+MoE 128e top-8.
+"""
+
+from repro.configs.base import ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    head_dim=128,
+    d_ff=1536,
+    vocab=151936,
+    qk_norm=True,
+    rope_theta=1e6,
+    moe=MoEConfig(n_experts=128, top_k=8, d_expert=1536),
+    source="[hf:Qwen/Qwen3-30B-A3B]",
+)
+
+SMOKE = ModelConfig(
+    name="qwen3-moe-smoke",
+    family="moe",
+    n_layers=2,
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=2,
+    head_dim=64,
+    d_ff=256,
+    vocab=512,
+    qk_norm=True,
+    moe=MoEConfig(n_experts=4, top_k=2, d_expert=256, capacity_factor=8.0),
+    source="[hf:Qwen/Qwen3-30B-A3B]",
+)

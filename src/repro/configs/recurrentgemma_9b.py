@@ -1,0 +1,38 @@
+"""RecurrentGemma-9B [hybrid] — RG-LRU + local attention, 1 attn : 2 recurrent.
+
+[arXiv:2402.19427] (Griffin / RecurrentGemma).
+Assigned spec: 38L d_model=4096 16H (GQA kv=1, i.e. MQA) d_ff=12288 vocab=256000.
+"""
+
+from repro.configs.base import HybridConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-9b",
+    family="hybrid",
+    n_layers=38,
+    d_model=4096,
+    n_heads=16,
+    n_kv_heads=1,
+    head_dim=256,
+    d_ff=12288,
+    vocab=256000,
+    rope_theta=1e4,
+    tie_embeddings=True,
+    hybrid=HybridConfig(lru_width=4096, attn_every=3, local_window=2048),
+    source="[arXiv:2402.19427]",
+)
+
+SMOKE = ModelConfig(
+    name="recurrentgemma-smoke",
+    family="hybrid",
+    n_layers=2,            # one RG-LRU block + one local-attn block
+    d_model=256,
+    n_heads=4,
+    n_kv_heads=1,
+    head_dim=64,
+    d_ff=512,
+    vocab=512,
+    tie_embeddings=True,
+    hybrid=HybridConfig(lru_width=256, attn_every=2, local_window=64),
+    source="[arXiv:2402.19427]",
+)

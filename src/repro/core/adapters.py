@@ -1,0 +1,228 @@
+"""Tensorized adapters (FedTT §4.1) and the tensorized classifier (Fig. 1c).
+
+A tensorized adapter is a bottleneck adapter (Houlsby et al., 2019) whose two
+projection matrices are stored in TT format:
+
+    y = x + TT_up( gelu( TT_down(x) ) )          (residual, zero at init)
+
+``TT_down``: d_model -> bottleneck, ``TT_up``: bottleneck -> d_model.  The
+adapter is placed after the attention sublayer and after the MLP sublayer of
+every encoder/decoder block (paper Fig. 1b).
+
+Everything is functional: ``init`` returns a params pytree (dict of lists of
+TT factors), ``apply`` consumes it.  Static shape info lives in AdapterSpec.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tt import TTSpec, make_tt_spec, tt_init, tt_matvec, tt_svd
+
+
+@dataclasses.dataclass(frozen=True)
+class AdapterSpec:
+    """Static description of one tensorized adapter."""
+
+    d_model: int
+    bottleneck: int = 64
+    tt_rank: int = 5
+    use_kernel: bool = False      # route through the fused Pallas kernel
+
+    @property
+    def down(self) -> TTSpec:
+        return make_tt_spec(self.d_model, self.bottleneck, self.tt_rank)
+
+    @property
+    def up(self) -> TTSpec:
+        return make_tt_spec(self.bottleneck, self.d_model, self.tt_rank)
+
+    @property
+    def n_params(self) -> int:
+        return self.down.n_params + self.up.n_params
+
+    @property
+    def n_factors(self) -> int:
+        """Total number of TT factors J_down + J_up (FedTT+ freezes over these)."""
+        return self.down.order + self.up.order
+
+
+def adapter_init(key: jax.Array, spec: AdapterSpec, dtype=jnp.float32) -> dict:
+    kd, ku = jax.random.split(key)
+    return {
+        "down": tt_init(kd, spec.down, dtype=dtype, zero_last=False),
+        "up": tt_init(ku, spec.up, dtype=dtype, zero_last=True),
+    }
+
+
+_TOKEN_CHUNK = 1024
+
+
+def _fold_input_cores(factors, in_dims, t):
+    """Fold G_j over input dims; t: (T, r, k_j..k_a) -> (T, r_a)."""
+    import math as _m
+    T = t.shape[0]
+    for j, k in enumerate(in_dims):
+        g = factors[j]
+        r_in, _, r_out = g.shape
+        rest = _m.prod(in_dims[j + 1:]) if j + 1 < len(in_dims) else 1
+        t = t.reshape((T, r_in, k, rest)).transpose((0, 3, 1, 2)).reshape(
+            (T * rest, r_in * k))
+        t = t @ g.reshape((r_in * k, r_out)).astype(t.dtype)
+        t = t.reshape((T, rest, r_out)).transpose((0, 2, 1))
+    return t.reshape((T, factors[len(in_dims) - 1].shape[-1]))
+
+
+def _expand_output_cores(factors, t):
+    """Expand output cores: t (T, r_a) -> (T, prod(out dims))."""
+    T = t.shape[0]
+    t = t[:, None, :]
+    for g in factors:
+        r_in, k, r_out = g.shape
+        pre = t.shape[1]
+        t = t.reshape((T * pre, r_in)) @ g.reshape((r_in, k * r_out)).astype(t.dtype)
+        t = t.reshape((T, pre * k, r_out))
+    return t.reshape((T, -1))
+
+
+def adapter_shardable(spec: "AdapterSpec", model_size: int) -> bool:
+    """The TT-sharded path needs the leading input core of `down` and the
+    leading output core of `up` to equal the model-axis size."""
+    return (spec.down.core_dims[0] == model_size
+            and spec.up.core_dims[spec.up.split] == model_size)
+
+
+def adapter_apply_sharded(params: dict, spec: "AdapterSpec", x: jax.Array,
+                          dist) -> jax.Array:
+    """Beyond-paper optimization (EXPERIMENTS.md §Perf H3): apply the TT
+    adapter directly to the `model`-sharded residual stream.
+
+    Each shard owns a fixed index of the leading input core k_1 (= model-axis
+    size), so the down-chain folds locally into a PARTIAL (T, r_a) tensor; one
+    psum of that rank-sized sliver (r=5!) replaces the (B, S, d) all-gather
+    the naive path needs -- hundreds of times fewer collective bytes.  The
+    up-chain expands only the local slice of its leading output core, so the
+    output is born d-sharded; no collective on the way out.
+    """
+    import math as _m
+    from jax.sharding import PartitionSpec as P
+
+    mesh, maxis = dist.mesh, dist.model_axis
+    m = dist.model_size
+    b, s, d = x.shape
+    bsz = int(np.prod([mesh.shape[a] for a in dist.batch_axes])) if dist.batch_axes else 1
+    b_ax = (dist.batch_axes if b % bsz == 0 else None) or None
+    xspec = P(b_ax, None, maxis)
+    fspec = jax.tree.map(lambda _: P(None), params)
+
+    down, up = spec.down, spec.up
+
+    def local_fn(pp, x_loc):
+        idx = jax.lax.axis_index(maxis)
+        bl, sl, d_loc = x_loc.shape
+        T = bl * sl
+        xt = x_loc.reshape(T, d_loc)
+        # seed: fold the leading input core at this shard's index
+        g1 = jax.lax.dynamic_index_in_dim(pp["down"][0], idx, axis=1)  # (1,1,r1)
+        r1 = g1.shape[-1]
+        t = (xt[:, None, :] * g1.reshape(1, r1, 1).astype(xt.dtype))   # (T, r1, d_loc)
+        in_dims = down.core_dims[1:down.split]
+        t = t.reshape((T, r1) + tuple(in_dims))
+        t = _fold_input_cores(pp["down"][1:down.split], list(in_dims), t) \
+            if in_dims else t.reshape(T, r1)
+        t = jax.lax.psum(t, maxis)                       # (T, r_a) -- tiny!
+        h = _expand_output_cores(pp["down"][down.split:], t)  # (T, bottleneck)
+        h = jax.nn.gelu(h.astype(jnp.float32)).astype(xt.dtype)
+        # up-chain: fold bottleneck cores fully (local), expand only our slice
+        u_in = up.core_dims[:up.split]
+        tu = h.reshape((T, 1) + tuple(u_in))
+        tu = _fold_input_cores(pp["up"][:up.split], list(u_in), tu)
+        gu = jax.lax.dynamic_index_in_dim(pp["up"][up.split], idx, axis=1)  # (r,1,r')
+        r_in, _, r_out = gu.shape
+        tu = tu @ gu.reshape(r_in, r_out).astype(tu.dtype)   # (T, r')
+        delta = _expand_output_cores(pp["up"][up.split + 1:], tu)
+        return x_loc + delta.reshape(bl, sl, d_loc)
+
+    return jax.shard_map(local_fn, mesh=mesh, in_specs=(fspec, xspec),
+                         out_specs=xspec, check_vma=False)(params, x)
+
+
+def adapter_apply(params: dict, spec: AdapterSpec, x: jax.Array,
+                  dist=None) -> jax.Array:
+    """x: (..., d_model) -> (..., d_model), residual included.
+
+    With a DistContext and a shardable core layout, uses the TT-sharded path
+    (adapter_apply_sharded) -- no activation all-gather.  The pure-jnp path
+    microbatches tokens through the contraction so the (tokens, r*k) chain
+    intermediates stay bounded -- the Pallas kernel (use_kernel=True) fuses
+    the whole chain in VMEM instead."""
+    if (dist is not None and getattr(dist, "tp", True)
+            and getattr(dist, "tt_sharded", True) and x.ndim == 3
+            and adapter_shardable(spec, dist.model_size)):
+        return adapter_apply_sharded(params, spec, x, dist)
+    if spec.use_kernel:
+        from repro.kernels.ops import tt_adapter_fused
+        return x + tt_adapter_fused(params["down"], params["up"], spec.down, spec.up, x)
+
+    def delta(xf):
+        h = tt_matvec(params["down"], spec.down, xf)
+        h = jax.nn.gelu(h)
+        return tt_matvec(params["up"], spec.up, h)
+
+    # Chunk along the sequence dim only (axis -2), keeping the batch dim
+    # intact so its data-parallel sharding survives the reshape.  Skipped
+    # under the pure-FSDP strategy: per-device token counts are small there
+    # and the chunk-slice resharding triggers SPMD full-remat.
+    seq_chunk_ok = dist is None or getattr(dist, "tp", True)
+    if (seq_chunk_ok and x.ndim == 3 and x.shape[1] > _TOKEN_CHUNK
+            and x.shape[1] % _TOKEN_CHUNK == 0):
+        b, s, d = x.shape
+        ns = s // _TOKEN_CHUNK
+        xc = x.reshape(b, ns, _TOKEN_CHUNK, d).transpose(1, 0, 2, 3)
+        _, yc = jax.lax.scan(lambda _, c: (None, delta(c)), None, xc)
+        return x + yc.transpose(1, 0, 2, 3).reshape(b, s, d)
+    return x + delta(x)
+
+
+# ---------------------------------------------------------------------------
+# Tensorized classifier (optional, for sequence classification -- Fig. 1c)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class TTClassifierSpec:
+    d_model: int
+    n_classes: int
+    tt_rank: int = 5
+
+    @property
+    def proj(self) -> TTSpec:
+        # Paper compresses the dense (d_model x d_model) pooler projection and
+        # keeps a small dense (d_model x n_classes) output on top.
+        return make_tt_spec(self.d_model, self.d_model, self.tt_rank)
+
+    @property
+    def n_params(self) -> int:
+        return self.proj.n_params + self.d_model * self.n_classes + self.n_classes
+
+
+def tt_classifier_init(key: jax.Array, spec: TTClassifierSpec,
+                       pretrained_proj: jax.Array | None = None,
+                       dtype=jnp.float32) -> dict:
+    kp, ko = jax.random.split(key)
+    if pretrained_proj is not None:
+        proj = tt_svd(pretrained_proj.astype(jnp.float32), spec.proj)
+        proj = [f.astype(dtype) for f in proj]
+    else:
+        proj = tt_init(kp, spec.proj, dtype=dtype, zero_last=False)
+    out = 0.02 * jax.random.normal(ko, (spec.d_model, spec.n_classes))
+    return {"proj": proj, "out_w": out.astype(dtype),
+            "out_b": jnp.zeros((spec.n_classes,), dtype)}
+
+
+def tt_classifier_apply(params: dict, spec: TTClassifierSpec, pooled: jax.Array) -> jax.Array:
+    h = jnp.tanh(tt_matvec(params["proj"], spec.proj, pooled))
+    return h @ params["out_w"] + params["out_b"]

@@ -1,0 +1,114 @@
+"""PEFT baselines the paper compares against (Tables 1-6).
+
+Implemented methods and what each trains / communicates per round:
+
+  lora      -- LoRA (Hu et al. 2021): dW = (alpha/r) * A @ B on q,v projections.
+  ffa_lora  -- FFA-LoRA (Sun et al. 2024): A frozen after init; only B trained
+               and communicated (halves up-link, removes A*B cross terms).
+  rolora    -- RoLoRA (Chen et al.): alternating minimization -- even rounds
+               train A, odd rounds train B; only the active half is sent.
+  bitfit    -- BitFit (Zaken et al. 2021): backbone bias terms only.
+  adapter   -- dense bottleneck adapter (Houlsby et al. 2019).
+  prompt    -- Prompt tuning (Lester et al. 2021): learnable soft tokens.
+  fedtt     -- tensorized adapters (this paper) -- see core/adapters.py.
+  fedtt_plus-- fedtt + adaptive factor freezing -- see fed/rounds.py.
+
+All are functional: *_init returns a params pytree, *_apply consumes it.
+``trainable_mask(method, params, round)`` (in fed/rounds.py) decides which
+leaves are updated & communicated.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# LoRA family
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class LoRASpec:
+    d_in: int
+    d_out: int
+    rank: int = 8
+    alpha: float = 16.0
+
+    @property
+    def n_params(self) -> int:
+        return self.rank * (self.d_in + self.d_out)
+
+
+def lora_init(key: jax.Array, spec: LoRASpec, dtype=jnp.float32) -> dict:
+    ka, _ = jax.random.split(key)
+    a = jax.random.normal(ka, (spec.d_in, spec.rank)) / jnp.sqrt(spec.d_in)
+    return {"A": a.astype(dtype), "B": jnp.zeros((spec.rank, spec.d_out), dtype)}
+
+
+def lora_delta(params: dict, spec: LoRASpec, x: jax.Array) -> jax.Array:
+    """The additive LoRA path: (alpha/r) * x @ A @ B."""
+    scale = spec.alpha / spec.rank
+    return scale * ((x @ params["A"]) @ params["B"])
+
+
+# ---------------------------------------------------------------------------
+# Dense bottleneck adapter (Houlsby)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DenseAdapterSpec:
+    d_model: int
+    bottleneck: int = 64
+
+    @property
+    def n_params(self) -> int:
+        return 2 * self.d_model * self.bottleneck + self.bottleneck + self.d_model
+
+
+def dense_adapter_init(key: jax.Array, spec: DenseAdapterSpec, dtype=jnp.float32) -> dict:
+    kd, _ = jax.random.split(key)
+    down = jax.random.normal(kd, (spec.d_model, spec.bottleneck)) / jnp.sqrt(spec.d_model)
+    return {
+        "down_w": down.astype(dtype),
+        "down_b": jnp.zeros((spec.bottleneck,), dtype),
+        "up_w": jnp.zeros((spec.bottleneck, spec.d_model), dtype),
+        "up_b": jnp.zeros((spec.d_model,), dtype),
+    }
+
+
+def dense_adapter_apply(params: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.gelu(x @ params["down_w"] + params["down_b"])
+    return x + h @ params["up_w"] + params["up_b"]
+
+
+# ---------------------------------------------------------------------------
+# Prompt tuning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PromptSpec:
+    d_model: int
+    n_tokens: int = 20
+
+    @property
+    def n_params(self) -> int:
+        return self.n_tokens * self.d_model
+
+
+def prompt_init(key: jax.Array, spec: PromptSpec, dtype=jnp.float32) -> dict:
+    p = 0.02 * jax.random.normal(key, (spec.n_tokens, spec.d_model))
+    return {"prompt": p.astype(dtype)}
+
+
+def prompt_prepend(params: dict, embeds: jax.Array) -> jax.Array:
+    """embeds: (B, S, d) -> (B, n_tokens + S, d)."""
+    b = embeds.shape[0]
+    p = jnp.broadcast_to(params["prompt"][None], (b,) + params["prompt"].shape)
+    return jnp.concatenate([p.astype(embeds.dtype), embeds], axis=1)
+
+
+PEFT_METHODS = ("fedtt", "fedtt_plus", "lora", "ffa_lora", "rolora",
+                "bitfit", "adapter", "prompt")

@@ -1,0 +1,264 @@
+"""Tensor-Train (TT) format core: shapes, initialization, contraction, TT-SVD.
+
+Implements the tensorized linear layer of FedTT (Ghiasvand et al., ACL 2025
+Findings, §3.2): a weight matrix ``W in R^{P x Q}`` is represented by J tensor
+factors ``G_j in R^{r_{j-1} x k_j x r_j}`` with boundary ranks r_0 = r_J = 1
+and ``prod_j k_j = P * Q``.  The forward pass contracts activations against
+the factor chain directly -- ``W`` is never materialized (paper Fig. 1a).
+
+Convention: the first ``a`` core dims factorize the *input* dimension P
+(``prod_{j<=a} k_j = P``) and the remaining dims factorize the *output*
+dimension Q.  This mirrors the paper's Table 10 shapes, e.g. a 768 x 64
+adapter down-projection uses cores [8, 8, 12, 8, 8] with 8*8*12 = 768 and
+8*8 = 64.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Shape selection
+# ---------------------------------------------------------------------------
+
+# Paper Table 10 ("The shape settings of the TT-format").  Keys are (P, Q).
+PAPER_TT_SHAPES: dict[tuple[int, int], tuple[tuple[int, ...], int]] = {
+    # (matrix shape) -> (core dims, split index a such that prod(dims[:a]) == P)
+    (768, 64): ((8, 8, 12, 8, 8), 3),
+    (64, 768): ((8, 8, 12, 8, 8), 2),      # 8*8 = 64 in, 12*8*8 = 768 out
+    (4096, 64): ((16, 16, 16, 4, 4, 4), 3),
+    (64, 4096): ((4, 4, 4, 16, 16, 16), 3),
+    (768, 768): ((12, 8, 8, 8, 8, 12), 3),
+}
+
+
+def factorize_balanced(n: int, max_dim: int = 16) -> list[int]:
+    """Factor ``n`` into dims each <= max_dim, as balanced as possible.
+
+    Greedy: pull prime factors, then merge smallest pairs while the product
+    stays <= max_dim.  Deterministic for a given n.
+    """
+    if n <= 0:
+        raise ValueError(f"cannot factorize {n}")
+    if n == 1:
+        return [1]
+    primes: list[int] = []
+    m = n
+    d = 2
+    while d * d <= m:
+        while m % d == 0:
+            primes.append(d)
+            m //= d
+        d += 1
+    if m > 1:
+        primes.append(m)
+    if max(primes) > max_dim:
+        raise ValueError(f"{n} has prime factor {max(primes)} > max_dim={max_dim}")
+    dims = sorted(primes)
+    # merge smallest two while it fits
+    while len(dims) > 1 and dims[0] * dims[1] <= max_dim:
+        merged = dims[0] * dims[1]
+        dims = sorted(dims[2:] + [merged])
+    # descending: the largest core first, so a d_model divisible by the mesh
+    # `model` axis gets that axis as its leading core -- the condition for
+    # the TT-sharded adapter path (core/adapters.py) to avoid all-gathers.
+    return sorted(dims, reverse=True)
+
+
+@dataclasses.dataclass(frozen=True)
+class TTSpec:
+    """Static description of one TT-format matrix W in R^{in_dim x out_dim}."""
+
+    in_dim: int
+    out_dim: int
+    core_dims: tuple[int, ...]   # k_1 .. k_J
+    split: int                   # a: prod(core_dims[:a]) == in_dim
+    rank: int                    # internal TT rank r (r_0 = r_J = 1)
+
+    def __post_init__(self):
+        if math.prod(self.core_dims[: self.split]) != self.in_dim:
+            raise ValueError(
+                f"input core dims {self.core_dims[:self.split]} do not multiply "
+                f"to in_dim={self.in_dim}")
+        if math.prod(self.core_dims[self.split:]) != self.out_dim:
+            raise ValueError(
+                f"output core dims {self.core_dims[self.split:]} do not multiply "
+                f"to out_dim={self.out_dim}")
+
+    @property
+    def order(self) -> int:
+        return len(self.core_dims)
+
+    @property
+    def ranks(self) -> tuple[int, ...]:
+        """(r_0, .., r_J) with boundary 1."""
+        return (1,) + (self.rank,) * (self.order - 1) + (1,)
+
+    def factor_shapes(self) -> list[tuple[int, int, int]]:
+        r = self.ranks
+        return [(r[j], self.core_dims[j], r[j + 1]) for j in range(self.order)]
+
+    @property
+    def n_params(self) -> int:
+        return sum(a * b * c for a, b, c in self.factor_shapes())
+
+    @property
+    def dense_params(self) -> int:
+        return self.in_dim * self.out_dim
+
+    @property
+    def compression(self) -> float:
+        return self.dense_params / self.n_params
+
+
+def make_tt_spec(in_dim: int, out_dim: int, rank: int = 5,
+                 max_core_dim: int = 16) -> TTSpec:
+    """Build a TTSpec, preferring the paper's Table 10 core shapes."""
+    if (in_dim, out_dim) in PAPER_TT_SHAPES:
+        dims, split = PAPER_TT_SHAPES[(in_dim, out_dim)]
+        return TTSpec(in_dim, out_dim, dims, split, rank)
+    in_dims = factorize_balanced(in_dim, max_core_dim)
+    out_dims = factorize_balanced(out_dim, max_core_dim)
+    return TTSpec(in_dim, out_dim, tuple(in_dims + out_dims), len(in_dims), rank)
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+def tt_init(key: jax.Array, spec: TTSpec, dtype=jnp.float32,
+            zero_last: bool = True, scale: float = 1.0) -> list[jax.Array]:
+    """Initialize TT factors.
+
+    Each factor ~ N(0, sigma^2) with sigma chosen so the reconstructed W has
+    std ~ scale / sqrt(in_dim) (Glorot-ish through the factor chain).  With
+    ``zero_last`` the final factor is zeros, so the adapter output is exactly 0
+    at init (like LoRA's B=0) while earlier factors still receive gradient
+    after the first step -- and G_J is always trainable in FedTT+ (Alg. 2).
+    """
+    shapes = spec.factor_shapes()
+    J = spec.order
+    # std of product of J gaussian factor chains: contraction over ranks and
+    # input dims multiplies variances; target per-factor sigma:
+    #   (sigma^2)^J * (r^{J-1}) * in_dim = (scale/sqrt(in_dim))^2 * in_dim
+    # -> sigma = (scale^2 / r^{J-1} / in_dim)^{1/(2J)}
+    n_active = J if not zero_last else J - 1
+    r_prod = float(spec.rank) ** (J - 1)
+    sigma = (scale**2 / (r_prod * spec.in_dim)) ** (1.0 / (2 * max(n_active, 1)))
+    keys = jax.random.split(key, J)
+    factors = []
+    for j, shp in enumerate(shapes):
+        if zero_last and j == J - 1:
+            factors.append(jnp.zeros(shp, dtype))
+        else:
+            factors.append((sigma * jax.random.normal(keys[j], shp)).astype(dtype))
+    return factors
+
+
+# ---------------------------------------------------------------------------
+# Contraction (the tensorized linear forward) -- pure jnp reference
+# ---------------------------------------------------------------------------
+
+def tt_matvec(factors: Sequence[jax.Array], spec: TTSpec, x: jax.Array) -> jax.Array:
+    """y = x @ W(factors); x: (..., in_dim) -> (..., out_dim).
+
+    W[i_1..i_a, o_1..o_b] = G_1[:,i_1,:] ... G_a[:,i_a,:] G_{a+1}[:,o_1,:] ... G_J[:,o_b,:]
+    (chain matrix product, boundary ranks 1).
+
+    Fold input cores left-to-right: maintain t with shape
+    (B, r_j, k_{j+1}..k_a) after absorbing G_1..G_j; each step is one GEMM
+    with reduction dim r_{j-1} * k_j.  Then expand output cores left-to-right.
+    """
+    batch_shape = x.shape[:-1]
+    B = math.prod(batch_shape) if batch_shape else 1
+    a = spec.split
+    in_dims = spec.core_dims[:a]
+    dtype = x.dtype
+
+    t = x.reshape((B, 1) + tuple(in_dims))  # (B, r_0=1, k_1..k_a)
+    for j in range(a):
+        g = factors[j]                       # (r_{j-1}, k_j, r_j)
+        r_in, k, r_out = g.shape
+        rest = math.prod(in_dims[j + 1:]) if j + 1 < a else 1
+        # t: (B, r_in, k, rest) -> (B, rest, r_in*k) @ (r_in*k, r_out)
+        t = t.reshape((B, r_in, k, rest)).transpose((0, 3, 1, 2)).reshape((B * rest, r_in * k))
+        t = t @ g.reshape((r_in * k, r_out)).astype(dtype)
+        t = t.reshape((B, rest, r_out)).transpose((0, 2, 1))  # (B, r_out, rest)
+    # now t: (B, r_a, 1) -> (B, r_a)
+    t = t.reshape((B, factors[a - 1].shape[-1])) if a > 0 else x.reshape((B, 1))
+    # ---- expand output cores
+    out_dims = spec.core_dims[a:]
+    # t: (B, prod(out_dims[:m]), r)   after absorbing m output cores
+    t = t[:, None, :]  # (B, 1, r_a)
+    for j in range(a, spec.order):
+        g = factors[j]                       # (r, k, r')
+        r_in, k, r_out = g.shape
+        pre = t.shape[1]
+        t = t.reshape((B * pre, r_in)) @ g.reshape((r_in, k * r_out)).astype(dtype)
+        t = t.reshape((B, pre * k, r_out))
+    y = t.reshape((B, spec.out_dim))
+    return y.reshape(batch_shape + (spec.out_dim,))
+
+
+def tt_reconstruct(factors: Sequence[jax.Array], spec: TTSpec) -> jax.Array:
+    """Materialize W in R^{in_dim x out_dim} (tests / TT-SVD roundtrips only)."""
+    t = factors[0]  # (1, k_1, r_1)
+    acc = t.reshape((t.shape[1], t.shape[2]))
+    for g in factors[1:]:
+        r_in, k, r_out = g.shape
+        acc = acc @ g.reshape((r_in, k * r_out))
+        acc = acc.reshape((-1, r_out))
+    return acc.reshape((spec.in_dim, spec.out_dim))
+
+
+# ---------------------------------------------------------------------------
+# TT-SVD (Oseledets 2011) -- used to compress a pretrained classifier head
+# ---------------------------------------------------------------------------
+
+def tt_svd(w: jax.Array, spec: TTSpec) -> list[jax.Array]:
+    """Decompose a dense matrix into TT factors for ``spec`` via sequential SVD.
+
+    Ranks are truncated to ``spec.rank``; reconstruction is approximate when
+    the matrix's true TT-ranks exceed it.
+    """
+    if w.shape != (spec.in_dim, spec.out_dim):
+        raise ValueError(f"w shape {w.shape} != ({spec.in_dim}, {spec.out_dim})")
+    dims = spec.core_dims
+    c = np.asarray(w, dtype=np.float64).reshape(dims)
+    factors: list[jax.Array] = []
+    r_prev = 1
+    for j in range(spec.order - 1):
+        c = c.reshape((r_prev * dims[j], -1))
+        u, s, vt = np.linalg.svd(c, full_matrices=False)
+        r = min(spec.rank, u.shape[1])
+        u, s, vt = u[:, :r], s[:r], vt[:r]
+        # pad to the spec's uniform rank so factor shapes are static
+        r_spec = spec.ranks[j + 1]
+        if r < r_spec:
+            u = np.pad(u, ((0, 0), (0, r_spec - r)))
+            s = np.pad(s, (0, r_spec - r))
+            vt = np.pad(vt, ((0, r_spec - r), (0, 0)))
+        factors.append(jnp.asarray(u.reshape((r_prev, dims[j], r_spec)), dtype=w.dtype))
+        c = (s[:, None] * vt)
+        r_prev = r_spec
+    factors.append(jnp.asarray(c.reshape((r_prev, dims[-1], 1)), dtype=w.dtype))
+    return factors
+
+
+# ---------------------------------------------------------------------------
+# Pytree helpers
+# ---------------------------------------------------------------------------
+
+def tt_param_count(params) -> int:
+    """Total number of scalars in a pytree."""
+    return sum(int(np.prod(p.shape)) for p in jax.tree.leaves(params))
+
+
+def tt_bytes(params, dtype_bytes: int = 4) -> int:
+    return sum(int(np.prod(p.shape)) * p.dtype.itemsize for p in jax.tree.leaves(params))

@@ -1,0 +1,110 @@
+"""Deterministic synthetic data pipeline.
+
+Two task families (no external datasets exist offline -- DESIGN.md §7):
+
+* ``lm_batches`` -- token streams for causal-LM training: a mixture of
+  repeated n-gram motifs so a model can actually reduce loss.
+* ``ClassificationTask`` -- GLUE-style sequence classification: each class c
+  has a token distribution peaked on its own token subset; sequences are
+  sampled from the class distribution.  Linearly separable enough to train in
+  seconds, hard enough that an untrained model sits at chance.
+
+Both are pure functions of (seed, index) so any shard of any batch can be
+re-materialized anywhere -- the property a sharded input pipeline needs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def lm_batch(seed: int, step: int, batch: int, seq: int, vocab: int,
+             motif_len: int = 16) -> dict:
+    """Deterministic LM batch: motif-repeating token streams."""
+    rng = np.random.default_rng(np.uint64(seed * 1_000_003 + step))
+    n_motifs = max(vocab // 64, 4)
+    motifs = rng.integers(0, vocab, size=(n_motifs, motif_len))
+    picks = rng.integers(0, n_motifs, size=(batch, seq // motif_len + 1))
+    toks = motifs[picks].reshape(batch, -1)[:, :seq]
+    noise = rng.integers(0, vocab, size=toks.shape)
+    keep = rng.random(toks.shape) < 0.9
+    toks = np.where(keep, toks, noise)
+    return {"tokens": jnp.asarray(toks, jnp.int32)}
+
+
+@dataclasses.dataclass(frozen=True)
+class ClassificationTask:
+    """Synthetic GLUE-like task."""
+
+    n_classes: int
+    vocab: int
+    seq_len: int
+    seed: int = 0
+    signal: float = 0.35   # fraction of tokens drawn from the class subset
+
+    def _class_tokens(self) -> np.ndarray:
+        rng = np.random.default_rng(self.seed)
+        per = self.vocab // (2 * self.n_classes)
+        return rng.permutation(self.vocab)[: self.n_classes * per].reshape(
+            self.n_classes, per)
+
+    def sample(self, n: int, labels: np.ndarray | None = None,
+               seed_offset: int = 0) -> dict:
+        rng = np.random.default_rng(self.seed + 7919 * (seed_offset + 1))
+        if labels is None:
+            labels = rng.integers(0, self.n_classes, size=n)
+        ct = self._class_tokens()
+        toks = rng.integers(0, self.vocab, size=(n, self.seq_len))
+        mask = rng.random((n, self.seq_len)) < self.signal
+        sig = ct[labels][np.arange(n)[:, None],
+                         rng.integers(0, ct.shape[1], size=(n, self.seq_len))]
+        toks = np.where(mask, sig, toks)
+        return {"tokens": jnp.asarray(toks, jnp.int32),
+                "labels": jnp.asarray(labels, jnp.int32)}
+
+
+def label_skew_partition(labels: np.ndarray, n_clients: int,
+                         proportions: list[list[float]] | None = None,
+                         alpha: float | None = None, seed: int = 0
+                         ) -> list[np.ndarray]:
+    """Split example indices across clients with label skew.
+
+    `proportions[c][y]` = share of client c's data with label y (paper
+    Appendix B explicit splits), OR `alpha` for a Dirichlet(alpha) split
+    (lower = more heterogeneous).  Returns per-client index arrays."""
+    rng = np.random.default_rng(seed)
+    n_classes = int(labels.max()) + 1
+    by_class = [np.where(labels == y)[0] for y in range(n_classes)]
+    for idx in by_class:
+        rng.shuffle(idx)
+    if proportions is None:
+        if alpha is None:
+            proportions = [[1.0 / n_classes] * n_classes] * n_clients
+        else:
+            props = rng.dirichlet([alpha] * n_classes, size=n_clients)
+            proportions = props.tolist()
+    # normalize columns so every example is assigned exactly once
+    mat = np.asarray(proportions, dtype=np.float64)          # (clients, classes)
+    mat = mat / mat.sum(axis=0, keepdims=True)
+    out: list[list[int]] = [[] for _ in range(n_clients)]
+    for y, idx in enumerate(by_class):
+        cuts = np.floor(np.cumsum(mat[:, y]) * len(idx)).astype(int)
+        cuts[-1] = len(idx)                # rounding must not orphan examples
+        prev = 0
+        for c, cut in enumerate(cuts):
+            out[c].extend(idx[prev:cut])
+            prev = cut
+    return [np.asarray(sorted(o)) for o in out]
+
+
+# Paper Appendix B explicit heterogeneity splits (3 clients)
+PAPER_SPLITS = {
+    ("mild", 2): [[0.15, 0.85], [0.85, 0.15], [0.5, 0.5]],
+    ("severe", 2): [[0.05, 0.95], [0.95, 0.05], [0.5, 0.5]],
+    ("mild", 3): [[0.6, 0.2, 0.2], [0.2, 0.6, 0.2], [0.2, 0.2, 0.6]],
+    ("severe", 3): [[0.9, 0.05, 0.05], [0.05, 0.9, 0.05], [0.05, 0.05, 0.9]],
+}

@@ -1,0 +1,58 @@
+"""Client-side local update (Alg. 1 lines 3-5) for classification and LM
+fine-tuning tasks.  A client owns: its PEFT params (+ classifier), an
+optimizer state, and a local data shard.  The backbone is frozen and shared.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import forward_classify
+from repro.optim import apply_updates, masked_update
+from repro.train.step import cross_entropy, lm_loss
+
+
+def classify_loss(trainable: dict, backbone: dict, cfg: ModelConfig,
+                  batch: dict, n_classes: int) -> tuple[jax.Array, dict]:
+    """trainable = {"peft": ..., "classifier": ...}."""
+    params = {"backbone": backbone, "peft": trainable["peft"]}
+    logits, aux = forward_classify(params, cfg, batch, trainable["classifier"],
+                                   n_classes)
+    loss = cross_entropy(logits, batch["labels"]) + 0.01 * aux
+    acc = jnp.mean((jnp.argmax(logits, -1) == batch["labels"]).astype(jnp.float32))
+    return loss, {"acc": acc}
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_classes", "optimizer"))
+def local_step_classify(trainable: dict, opt_state, backbone: dict,
+                        batch: dict, freeze_mask, *, cfg: ModelConfig,
+                        n_classes: int, optimizer):
+    """One local SGD step on a classification batch."""
+    (loss, metrics), grads = jax.value_and_grad(
+        classify_loss, has_aux=True)(trainable, backbone, cfg, batch, n_classes)
+    if freeze_mask is not None:
+        grads = masked_update(grads, freeze_mask)
+    updates, opt_state = optimizer.update(grads, opt_state, trainable)
+    trainable = apply_updates(trainable, updates)
+    return trainable, opt_state, dict(metrics, loss=loss)
+
+
+@partial(jax.jit, static_argnames=("cfg", "optimizer"))
+def local_step_lm(trainable: dict, opt_state, backbone: dict, batch: dict,
+                  freeze_mask, *, cfg: ModelConfig, optimizer):
+    """One local SGD step on a causal-LM batch (LLaMA-style tasks)."""
+    def loss_fn(tr):
+        params = {"backbone": backbone, "peft": tr["peft"]}
+        return lm_loss(params, cfg, batch)
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(trainable)
+    if freeze_mask is not None:
+        grads = masked_update(grads, freeze_mask)
+    updates, opt_state = optimizer.update(grads, opt_state, trainable)
+    trainable = apply_updates(trainable, updates)
+    return trainable, opt_state, dict(metrics, loss=loss)

@@ -1,0 +1,71 @@
+"""Communication-cost accounting (paper §5.5, Tables 6/14/15).
+
+The paper counts up-link KB = trainable-parameter-count x 4 bytes / 1024
+(fp32 payloads).  We reproduce that analytically per method, and -- beyond
+the paper -- cross-check against the *actual* collective bytes in the
+compiled dry-run HLO (launch/roofline.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.fed.rounds import count_true, trainable_mask
+from repro.models.peft_glue import peft_param_count
+
+
+BYTES_PER_PARAM = 4  # paper counts fp32
+
+
+def uplink_kb(cfg: ModelConfig, n_classes: int | None = None,
+              round_idx: int = 0, peft_params: dict | None = None) -> float:
+    """Up-link message size per client per round, in KB.
+
+    For round-dependent methods (fedtt_plus, rolora) the exact communicated
+    subset for `round_idx` is counted from the live params when given;
+    otherwise the steady-state analytic count is used."""
+    m = cfg.peft.method
+    if peft_params is not None:
+        mask = trainable_mask(peft_params, cfg, round_idx)
+        n = count_true(mask, peft_params)
+        return n * BYTES_PER_PARAM / 1024
+    n = peft_param_count(cfg, n_classes)
+    if m == "fedtt_plus":
+        # 3 of J factors per tensorized layer; adapters dominate.  Exact count
+        # depends on core shapes; approximate with the paper's 1/3 ratio.
+        from repro.models.peft_glue import adapter_spec
+        spec = adapter_spec(cfg)
+        full = spec.down.n_params + spec.up.n_params
+        sent = (sum(_chain_sent(spec.down)) + sum(_chain_sent(spec.up)))
+        n = int(n * sent / full) if full else n
+    elif m == "rolora":
+        n //= 2
+    return n * BYTES_PER_PARAM / 1024
+
+
+def _chain_sent(tt_spec) -> list[int]:
+    """Param counts of the {G_1, G_r, G_J} subset (steady state)."""
+    shapes = tt_spec.factor_shapes()
+    j = len(shapes)
+    sizes = [int(np.prod(s)) for s in shapes]
+    if j <= 3:
+        return sizes
+    mid = int(np.mean(sizes[1:-1]))        # round-robin average middle factor
+    return [sizes[0], mid, sizes[-1]]
+
+
+@dataclasses.dataclass
+class CommLog:
+    """Accumulates the transmitted-bytes ledger of a federated run."""
+    uplink_kb_per_round: list = dataclasses.field(default_factory=list)
+    rounds_to_target: int | None = None
+
+    def record(self, kb: float):
+        self.uplink_kb_per_round.append(kb)
+
+    @property
+    def total_kb(self) -> float:
+        return float(np.sum(self.uplink_kb_per_round))

@@ -1,0 +1,55 @@
+"""Quantized up-link: int8 delta compression on top of FedTT.
+
+Beyond the paper: clients send (trainable_now - global) deltas quantized to
+int8 with one f32 scale per tensor; the server dequantizes, averages, and
+applies.  Stacks multiplicatively with the TT compression: FedTT x int8 is a
+~4x further up-link cut over fp32 factors (Table 6 extension in
+bench_comm_cost), at a quantization error that round-to-nearest keeps below
+0.4% of the per-tensor max -- small against SGD noise.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INT8_MAX = 127.0
+
+
+def quantize_tree(tree):
+    """pytree of f32 -> (pytree of int8, pytree of f32 scales)."""
+    def q(x):
+        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / INT8_MAX
+        return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8), scale
+    pairs = jax.tree.map(q, tree)
+    qs = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    scales = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
+    return qs, scales
+
+
+def dequantize_tree(qs, scales):
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s, qs, scales)
+
+
+def quantize_delta(new_tree, base_tree):
+    """(new - base) -> quantized payload."""
+    delta = jax.tree.map(lambda a, b: (a - b).astype(jnp.float32),
+                         new_tree, base_tree)
+    return quantize_tree(delta)
+
+
+def apply_quantized_deltas(base_tree, payloads):
+    """Server: average the dequantized client deltas onto the base."""
+    n = len(payloads)
+    acc = None
+    for qs, scales in payloads:
+        d = dequantize_tree(qs, scales)
+        acc = d if acc is None else jax.tree.map(jnp.add, acc, d)
+    return jax.tree.map(lambda b, d: (b + d / n).astype(b.dtype), base_tree, acc)
+
+
+def payload_bytes(tree) -> int:
+    """Up-link bytes for one quantized payload: 1 B/param + 4 B/tensor."""
+    leaves = jax.tree.leaves(tree)
+    return sum(int(np.prod(x.shape)) for x in leaves) + 4 * len(leaves)

@@ -1,0 +1,92 @@
+"""Heterogeneous-rank FedTT -- the paper's stated future direction
+(Limitations: "allowing different tensor ranks to be assigned to clients
+based on their computational capabilities").
+
+Design:
+  * the server keeps a rank-r_max TT adapter set;
+  * down-link: factors are TT-rounded (reconstruct -> TT-SVD truncate) to each
+    client's capability rank r_c before sending -- the down-link payload also
+    shrinks with r_c;
+  * clients train at their own rank;
+  * up-link: each client sends its r_c-rank factors (bytes proportional to
+    r_c^2);
+  * server aggregation happens in MATRIX space: reconstruct each client's
+    adapter matrix (cheap -- adapters are d x 64), average, TT-SVD back to
+    r_max.  Aggregating products rather than factors is exactly the "ideal"
+    aggregation FedTT+ approximates (paper Eq. 2), so hetero-rank FedTT is
+    also interference-free by construction.
+
+Adapter-sized matrices make the reconstruct/decompose round-trip trivial
+(sub-ms); for full-matrix TT layers one would TT-round without
+reconstruction (sweep of QR/SVD over the chain), which tt_round implements
+when reconstruction is too large.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.adapters import AdapterSpec
+from repro.core.tt import TTSpec, make_tt_spec, tt_reconstruct, tt_svd
+
+
+def tt_round(factors, spec: TTSpec, new_rank: int):
+    """TT-rounding to a lower (or higher, zero-padded) uniform rank."""
+    new_spec = dataclasses.replace(spec, rank=new_rank)
+    w = tt_reconstruct(factors, spec)
+    return tt_svd(w, new_spec), new_spec
+
+
+def adapter_spec_at_rank(base: AdapterSpec, rank: int) -> AdapterSpec:
+    return dataclasses.replace(base, tt_rank=rank)
+
+
+def round_adapter(adapter: dict, base: AdapterSpec, rank: int) -> dict:
+    """Server -> client down-link: truncate both chains to the client rank."""
+    tgt = adapter_spec_at_rank(base, rank)
+    down, _ = tt_round(adapter["down"], base.down, rank)
+    up, _ = tt_round(adapter["up"], base.up, rank)
+    del tgt
+    return {"down": down, "up": up}
+
+
+def aggregate_matrix_space(client_adapters: list[dict],
+                           client_specs: list[AdapterSpec],
+                           server_spec: AdapterSpec,
+                           weights: list[float] | None = None) -> dict:
+    """Clients (possibly different ranks) -> server rank-r_max adapter.
+
+    Reconstruct every client's down/up matrices, weighted-average them, and
+    TT-SVD the averages back to the server rank.  Interference-free (the
+    average happens on products, the RHS of paper Eq. 2)."""
+    n = len(client_adapters)
+    weights = weights or [1.0 / n] * n
+
+    def avg_side(side: str, spec_of):
+        acc = None
+        for ad, sp, w in zip(client_adapters, client_specs, weights):
+            m = tt_reconstruct(ad[side], spec_of(sp)) * w
+            acc = m if acc is None else acc + m
+        return acc
+
+    w_down = avg_side("down", lambda sp: sp.down)
+    w_up = avg_side("up", lambda sp: sp.up)
+    return {"down": tt_svd(w_down, server_spec.down),
+            "up": tt_svd(w_up, server_spec.up)}
+
+
+def uplink_params(spec: AdapterSpec) -> int:
+    return spec.down.n_params + spec.up.n_params
+
+
+def assign_ranks(capabilities: list[float], ranks=(2, 5, 10)) -> list[int]:
+    """Map client capability scores (0..1] to TT ranks by tercile."""
+    qs = np.quantile(capabilities, [1 / 3, 2 / 3])
+    out = []
+    for c in capabilities:
+        out.append(ranks[0] if c <= qs[0] else ranks[1] if c <= qs[1] else ranks[2])
+    return out

@@ -1,0 +1,103 @@
+"""Jit-ready wrappers around the Pallas TT kernels.
+
+Forward runs the Pallas kernel (interpret=True off-TPU); backward is defined
+with jax.custom_vjp against the pure-jnp reference (exact same math), so the
+ops are fully differentiable for adapter training.  Batch dims are flattened
+and padded to the kernel block size.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import lru_cache, partial
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tt import TTSpec
+from repro.kernels import ref
+from repro.kernels.tt_contract import tt_adapter_kernel, tt_linear_kernel
+
+_BLOCK_B = 256
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@lru_cache(maxsize=None)
+def _linear_call(spec: TTSpec, block_b: int, interpret: bool):
+    return tt_linear_kernel(spec, block_b, interpret)
+
+
+@lru_cache(maxsize=None)
+def _adapter_call(spec_down: TTSpec, spec_up: TTSpec, block_b: int, interpret: bool):
+    return tt_adapter_kernel(spec_down, spec_up, block_b, interpret)
+
+
+def _flatten_pad(x: jax.Array, in_dim: int, block_b: int):
+    batch_shape = x.shape[:-1]
+    b = math.prod(batch_shape) if batch_shape else 1
+    xf = x.reshape(b, in_dim)
+    pad = (-b) % block_b
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+    return xf, batch_shape, b
+
+
+# ---------------------------------------------------------------------------
+# tt_linear
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(2,))
+def tt_linear(x: jax.Array, factors: tuple, spec: TTSpec) -> jax.Array:
+    xf, batch_shape, b = _flatten_pad(x, spec.in_dim, _BLOCK_B)
+    y = _linear_call(spec, _BLOCK_B, _interpret())(xf, factors)
+    return y[:b].reshape(batch_shape + (spec.out_dim,))
+
+
+def _tt_linear_fwd(x, factors, spec):
+    return tt_linear(x, factors, spec), (x, factors)
+
+
+def _tt_linear_bwd(spec, res, g):
+    x, factors = res
+    _, vjp = jax.vjp(lambda xx, ff: ref.tt_linear_ref(ff, spec, xx), x, tuple(factors))
+    dx, dfactors = vjp(g)
+    return dx, dfactors
+
+
+tt_linear.defvjp(_tt_linear_fwd, _tt_linear_bwd)
+
+
+# ---------------------------------------------------------------------------
+# tt_adapter_fused (delta only -- caller adds the residual)
+# ---------------------------------------------------------------------------
+
+def tt_adapter_fused(down: Sequence[jax.Array], up: Sequence[jax.Array],
+                     spec_down: TTSpec, spec_up: TTSpec,
+                     x: jax.Array) -> jax.Array:
+    return _tt_adapter(x, tuple(down), tuple(up), spec_down, spec_up)
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _tt_adapter(x, down, up, spec_down, spec_up):
+    xf, batch_shape, b = _flatten_pad(x, spec_down.in_dim, _BLOCK_B)
+    y = _adapter_call(spec_down, spec_up, _BLOCK_B, _interpret())(xf, down, up)
+    return y[:b].reshape(batch_shape + (spec_up.out_dim,))
+
+
+def _tt_adapter_fwd(x, down, up, spec_down, spec_up):
+    return _tt_adapter(x, down, up, spec_down, spec_up), (x, down, up)
+
+
+def _tt_adapter_bwd(spec_down, spec_up, res, g):
+    x, down, up = res
+    _, vjp = jax.vjp(
+        lambda xx, dd, uu: ref.tt_adapter_ref(dd, uu, spec_down, spec_up, xx),
+        x, tuple(down), tuple(up))
+    return vjp(g)
+
+
+_tt_adapter.defvjp(_tt_adapter_fwd, _tt_adapter_bwd)

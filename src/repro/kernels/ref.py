@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels (the reference every kernel test
+asserts against)."""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tt import TTSpec, tt_matvec
+
+
+def tt_linear_ref(factors: Sequence[jax.Array], spec: TTSpec,
+                  x: jax.Array) -> jax.Array:
+    """y = x @ W(factors): (..., in_dim) -> (..., out_dim)."""
+    return tt_matvec(factors, spec, x)
+
+
+def tt_adapter_ref(down: Sequence[jax.Array], up: Sequence[jax.Array],
+                   spec_down: TTSpec, spec_up: TTSpec,
+                   x: jax.Array) -> jax.Array:
+    """The adapter delta (WITHOUT the residual): TT_up(gelu(TT_down(x)))."""
+    h = tt_matvec(down, spec_down, x)
+    h = jax.nn.gelu(h)
+    return tt_matvec(up, spec_up, h)

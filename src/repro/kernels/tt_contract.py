@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: TT-format linear layer forward (the paper's compute
+hot-spot -- §3.2 "the contraction process is significantly faster than the
+original matrix-vector product").
+
+TPU adaptation (DESIGN.md §2): the TT factors are tiny (<= a few KB at rank 5)
+and live wholly in VMEM for the duration of the kernel; activations stream
+through VMEM in (BLOCK_B, in_dim) tiles on a 1-D grid over the batch.  The
+factor chain is contracted as a sequence of dense GEMMs feeding the MXU:
+input cores fold left-to-right (reduction dim r_{j-1} * k_j), output cores
+expand left-to-right.  Intermediates never leave VMEM.
+
+The fused adapter kernel (tt_adapter) chains down-chain -> GELU -> up-chain
+in one kernel so the bottleneck activation (BLOCK_B, 64) never round-trips
+to HBM -- the beyond-paper fusion measured in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.tt import TTSpec
+
+
+def _contract_in_kernel(x, factors: list, spec: TTSpec):
+    """The contraction chain on VMEM values.  x: (TB, in_dim)."""
+    tb = x.shape[0]
+    a = spec.split
+    in_dims = spec.core_dims[:a]
+
+    t = x.reshape((tb, 1) + tuple(in_dims))               # (TB, r0=1, k_1..k_a)
+    for j in range(a):
+        g = factors[j]                                    # (r_in, k, r_out)
+        r_in, k, r_out = g.shape
+        rest = math.prod(in_dims[j + 1:]) if j + 1 < a else 1
+        t = t.reshape((tb, r_in, k, rest)).transpose((0, 3, 1, 2))
+        t = t.reshape((tb * rest, r_in * k))
+        t = jnp.dot(t, g.reshape((r_in * k, r_out)),
+                    preferred_element_type=jnp.float32)
+        t = t.reshape((tb, rest, r_out)).transpose((0, 2, 1))
+    t = t.reshape((tb, factors[a - 1].shape[-1]))         # (TB, r_a)
+
+    t = t[:, None, :]                                     # (TB, 1, r_a)
+    for j in range(a, spec.order):
+        g = factors[j]
+        r_in, k, r_out = g.shape
+        pre = t.shape[1]
+        t = t.reshape((tb * pre, r_in))
+        t = jnp.dot(t, g.reshape((r_in, k * r_out)),
+                    preferred_element_type=jnp.float32)
+        t = t.reshape((tb, pre * k, r_out))
+    return t.reshape((tb, spec.out_dim))
+
+
+def tt_linear_kernel(spec: TTSpec, block_b: int, interpret: bool):
+    """Build the pallas_call for y = x @ W(factors)."""
+    n_factors = spec.order
+
+    def kernel(*refs):
+        x_ref = refs[0]
+        f_refs = refs[1:1 + n_factors]
+        o_ref = refs[-1]
+        x = x_ref[...]
+        factors = [f[...] for f in f_refs]
+        o_ref[...] = _contract_in_kernel(x, factors, spec).astype(o_ref.dtype)
+
+    def call(x: jax.Array, factors: Sequence[jax.Array]) -> jax.Array:
+        b = x.shape[0]
+        assert b % block_b == 0, (b, block_b)
+        grid = (b // block_b,)
+        in_specs = [pl.BlockSpec((block_b, spec.in_dim), lambda i: (i, 0))]
+        # factors are whole-array resident in VMEM for every grid step
+        for f in factors:
+            in_specs.append(pl.BlockSpec(f.shape, lambda i: (0,) * f.ndim))
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_b, spec.out_dim), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, spec.out_dim), x.dtype),
+            interpret=interpret,
+        )(x, *factors)
+
+    return call
+
+
+def tt_adapter_kernel(spec_down: TTSpec, spec_up: TTSpec, block_b: int,
+                      interpret: bool):
+    """Fused adapter delta: TT_up(gelu(TT_down(x))).  One VMEM round-trip."""
+    n_down = spec_down.order
+    n_up = spec_up.order
+
+    def kernel(*refs):
+        x_ref = refs[0]
+        d_refs = refs[1:1 + n_down]
+        u_refs = refs[1 + n_down:1 + n_down + n_up]
+        o_ref = refs[-1]
+        x = x_ref[...]
+        h = _contract_in_kernel(x, [f[...] for f in d_refs], spec_down)
+        h = jax.nn.gelu(h.astype(jnp.float32))
+        y = _contract_in_kernel(h.astype(x.dtype), [f[...] for f in u_refs], spec_up)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+    def call(x: jax.Array, down: Sequence[jax.Array],
+             up: Sequence[jax.Array]) -> jax.Array:
+        b = x.shape[0]
+        assert b % block_b == 0, (b, block_b)
+        grid = (b // block_b,)
+        in_specs = [pl.BlockSpec((block_b, spec_down.in_dim), lambda i: (i, 0))]
+        for f in list(down) + list(up):
+            in_specs.append(pl.BlockSpec(f.shape, lambda i: (0,) * f.ndim))
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_b, spec_up.out_dim), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, spec_up.out_dim), x.dtype),
+            interpret=interpret,
+        )(x, *down, *up)
+
+    return call

@@ -1,0 +1,224 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape x mesh)
+combination against the production mesh, with ShapeDtypeStruct inputs only
+(no allocation), and dump memory/cost/roofline analysis.
+
+The two XLA_FLAGS lines above MUST stay the first statements in this module:
+jax locks the device count at first init, and only the dry-run may see 512
+placeholder host devices (smoke tests and benches see 1).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3_8b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod] [--json out.json]
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ARCH_IDS, INPUT_SHAPES, get_config, shape_applicable
+from repro.launch import roofline as rl
+from repro.launch.inputs import batch_specs, decode_specs
+from repro.launch.mesh import batch_axes, make_production_mesh
+from repro.launch.shardings import (batch_shardings, cache_shardings,
+                                    param_shardings, replicated)
+from repro.models.moe import DistContext
+from repro.models.transformer import model_init
+from repro.optim import adamw
+from repro.train.step import prefill_step, serve_step, train_step
+
+DTYPE = jnp.bfloat16
+
+
+def build_dist(mesh, multi_pod: bool, fsdp: bool = True,
+               strategy: str = "tp_fsdp", tt_sharded: bool = True) -> DistContext:
+    baxes = batch_axes(multi_pod)
+    if strategy == "fsdp":
+        # pure FSDP: the `model` axis joins the batch axes; no TP anywhere
+        return DistContext(mesh=mesh, batch_axes=baxes + ("model",),
+                           model_axis="model", fsdp_axes=(),
+                           act_shard=False, tp=False, tt_sharded=tt_sharded)
+    return DistContext(mesh=mesh, batch_axes=baxes, model_axis="model",
+                       fsdp_axes=baxes if fsdp else (), tt_sharded=tt_sharded)
+
+
+def lower_one(arch: str, shape_name: str, multi_pod: bool = False,
+              remat: bool = True, fsdp: bool = True,
+              peft_method: str = "fedtt", strategy: str = "tp_fsdp",
+              cfg_transform=None, tt_sharded: bool = True):
+    """Lower + compile one (arch, shape, mesh).  Returns (compiled, meta)."""
+    import dataclasses
+    cfg = get_config(arch)
+    if peft_method != cfg.peft.method:
+        cfg = dataclasses.replace(
+            cfg, peft=dataclasses.replace(cfg.peft, method=peft_method))
+    if cfg_transform is not None:
+        cfg = cfg_transform(cfg)
+    shape = INPUT_SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    if not ok:
+        return None, {"skipped": reason}
+    if strategy == "fsdp" and cfg.moe is not None:
+        raise ValueError("pure-FSDP strategy is for dense-family archs")
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    base_strategy = "tp_fsdp" if strategy == "decode_repl" else strategy
+    dist = build_dist(mesh, multi_pod, fsdp=fsdp, strategy=base_strategy,
+                      tt_sharded=tt_sharded)
+    baxes = dist.batch_axes
+
+    params_shape = jax.eval_shape(lambda: model_init(jax.random.key(0), cfg, DTYPE))
+    fsdp_axes = batch_axes(multi_pod) if fsdp else None
+    p_shard = param_shardings(mesh, params_shape, fsdp_axes, cfg,
+                              strategy=base_strategy)
+    # PEFT params replicated (the FedTT design point)
+    p_shard["peft"] = replicated(mesh, params_shape["peft"])
+
+    t0 = time.time()
+    if shape.kind == "train":
+        optimizer = adamw(1e-3)
+        freeze_mask = None
+        opt_target = params_shape["peft"]
+        if cfg.peft.method == "fedtt_plus":
+            from repro.fed.rounds import trainable_mask
+            from repro.train.step import partition_by_mask
+            freeze_mask = trainable_mask(params_shape["peft"], cfg, round_idx=0)
+            opt_target, _ = partition_by_mask(params_shape["peft"], freeze_mask)
+        opt_shape = jax.eval_shape(optimizer.init, opt_target)
+        opt_shard = replicated(mesh, opt_shape)
+        batch = batch_specs(cfg, shape, DTYPE)
+        b_shard = batch_shardings(mesh, batch, baxes)
+
+        def step(params, opt_state, batch):
+            return train_step(params, opt_state, batch, cfg=cfg,
+                              optimizer=optimizer, dist=dist, remat=remat,
+                              freeze_mask=freeze_mask)
+
+        jitted = jax.jit(step, in_shardings=(p_shard, opt_shard, b_shard),
+                         donate_argnums=(0, 1))
+        lowered = jitted.lower(params_shape, opt_shape, batch)
+    elif shape.kind == "prefill":
+        batch = batch_specs(cfg, shape, DTYPE)
+        b_shard = batch_shardings(mesh, batch, baxes)
+
+        def pstep(params, batch):
+            return prefill_step(params, cfg, batch, dist=dist)
+
+        jitted = jax.jit(pstep, in_shardings=(p_shard, b_shard))
+        lowered = jitted.lower(params_shape, batch)
+    else:  # decode
+        import dataclasses as _dc
+        import numpy as np
+        if strategy == "decode_repl":
+            # weight-stationary decode: activations replicated over (pod,)data
+            # (tokens are KBs; weights must not be re-gathered per step)
+            dist = _dc.replace(dist, batch_axes=(), fsdp_axes=())
+            baxes = ()
+        tokens, pos, cache = decode_specs(cfg, shape, DTYPE)
+        c_shard = cache_shardings(mesh, cfg, cache, baxes)
+        bsz = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+        tok_shard = NamedSharding(
+            mesh, P(baxes) if (baxes and shape.global_batch % bsz == 0) else P())
+
+        def dstep(params, tokens, pos, cache):
+            return serve_step(params, cfg, tokens, pos, cache, dist=dist)
+
+        jitted = jax.jit(dstep,
+                         in_shardings=(p_shard, tok_shard, tok_shard, c_shard),
+                         donate_argnums=(3,))
+        lowered = jitted.lower(params_shape, tokens, pos, cache)
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    meta = {"arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "t_lower_s": round(t_lower, 1), "t_compile_s": round(t_compile, 1)}
+    return compiled, meta
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool, verbose: bool = True,
+            **kw) -> dict:
+    try:
+        compiled, meta = lower_one(arch, shape_name, multi_pod, **kw)
+    except Exception as e:
+        traceback.print_exc()
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16",
+                "error": f"{type(e).__name__}: {e}"}
+    if compiled is None:
+        return {"arch": arch, "shape": shape_name,
+                "mesh": "2x16x16" if multi_pod else "16x16", **meta}
+    r = rl.analyze(compiled)
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    chips = 512 if multi_pod else 256
+    mf = rl.model_flops_per_step(cfg, shape)
+    row = {**meta, **r.row(),
+           "model_flops_total": mf,
+           "useful_flops_frac": mf / max(r.flops * chips, 1.0)}
+    if verbose:
+        mem = f"{r.peak_memory/2**30:.2f}GiB" if r.peak_memory else "n/a"
+        print(f"[dryrun] {arch:24s} {shape_name:12s} {meta['mesh']:8s} "
+              f"compute={r.t_compute*1e3:8.2f}ms memory={r.t_memory*1e3:8.2f}ms "
+              f"coll={r.t_collective*1e3:8.2f}ms dom={r.dominant:10s} "
+              f"mem/dev={mem} (compile {meta['t_compile_s']}s)")
+        try:
+            print("  memory_analysis:", compiled.memory_analysis())
+        except Exception as e:
+            print("  memory_analysis unavailable:", e)
+        ca = compiled.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        print("  cost_analysis: flops=%.3e bytes=%.3e" %
+              (ca.get("flops", 0), ca.get("bytes accessed", 0)))
+    return row
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--peft", default="fedtt")
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args(argv)
+
+    pairs = []
+    archs = ARCH_IDS if (args.all or not args.arch) else [args.arch]
+    shapes = list(INPUT_SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    rows = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                rows.append(run_one(arch, shape, mp, fsdp=not args.no_fsdp,
+                                    remat=not args.no_remat,
+                                    peft_method=args.peft))
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {args.json}")
+    n_err = sum(1 for r in rows if "error" in r)
+    print(f"[dryrun] {len(rows)} combos, {n_err} errors")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

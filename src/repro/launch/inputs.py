@@ -1,0 +1,50 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns the abstract batch for train/prefill, or
+(tokens, pos, cache) for decode -- exactly what the jitted step functions
+take.  The audio/VLM modality frontends are STUBS per the assignment:
+frame/patch embeddings appear here pre-computed with the right shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HybridConfig, InputShape, ModelConfig
+from repro.models.transformer import init_cache
+
+I32 = jnp.int32
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16) -> dict:
+    """Abstract train/prefill batch."""
+    b, s = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        batch = {"embeds": jax.ShapeDtypeStruct((b, s, cfg.d_model), dtype)}
+        if shape.kind == "train":
+            batch["labels"] = jax.ShapeDtypeStruct((b, s), I32)
+        return batch
+    batch = {"tokens": jax.ShapeDtypeStruct((b, s), I32)}
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.n_image_tokens, cfg.d_model), dtype)
+    return batch
+
+
+def decode_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    """(tokens, pos, cache) abstract values for serve_step."""
+    b = shape.global_batch
+    tokens = jax.ShapeDtypeStruct((b,), I32)
+    pos = jax.ShapeDtypeStruct((b,), I32)
+    n_img = cfg.n_image_tokens if cfg.family == "vlm" else None
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, b, shape.seq_len, dtype=dtype, n_img=n_img))
+    return tokens, pos, cache
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, dtype=jnp.bfloat16):
+    """Kind-dispatched abstract inputs (the dry-run entry point)."""
+    if shape.kind == "decode":
+        return decode_specs(cfg, shape, dtype)
+    return batch_specs(cfg, shape, dtype)

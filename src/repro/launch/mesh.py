@@ -1,0 +1,35 @@
+"""Production mesh definitions.
+
+Single pod: 256 TPU v5e chips as (data=16, model=16).
+Multi-pod:  2 pods = 512 chips as (pod=2, data=16, model=16); the `pod` axis
+joins `data` for batch/FSDP sharding (DCN-ish outer axis).
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS *before* any jax import).
+"""
+
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh():
+    """1-device mesh for CPU tests (mesh axes exist, sizes 1)."""
+    return jax.make_mesh((1, 1), ("data", "model"), devices=jax.devices()[:1])
+
+
+def batch_axes(multi_pod: bool) -> tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)

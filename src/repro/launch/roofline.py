@@ -1,0 +1,134 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), all in seconds-per-step on TPU v5e:
+
+  compute    = HLO_FLOPs_per_device / 197e12      (bf16 MXU peak)
+  memory     = HLO_bytes_per_device / 819e9       (HBM bandwidth)
+  collective = collective_bytes_per_device / 50e9 (ICI, per-link)
+
+FLOPs/bytes come from ``compiled.cost_analysis()`` (the SPMD-partitioned
+per-device module).  Collective bytes are NOT in cost_analysis: we parse the
+optimized HLO (``compiled.as_text()``) and sum the output-shape bytes of
+every all-reduce / all-gather / reduce-scatter / all-to-all /
+collective-permute op (all-reduce counted twice: reduce-scatter+all-gather
+ring cost).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[16,4096,128]{2,1,0}" -> dtype, dims
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Sum output-shape bytes per collective kind from optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        stripped = line.strip()
+        # "%x = TYPE collective-kind(" or fusion-wrapped "... kind(..."
+        m = re.search(r"=\s+(\(?[\w\[\]{},\s/]+?\)?)\s+(" +
+                      "|".join(_COLLECTIVES) + r")(-start|-done)?\(", stripped)
+        if not m:
+            continue
+        kind = m.group(2)
+        if m.group(3) == "-done":      # avoid double counting async pairs
+            continue
+        out[kind] += _shape_bytes(m.group(1))
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops: float                 # per-device
+    hbm_bytes: float             # per-device
+    coll_bytes: int              # per-device (weighted)
+    coll_breakdown: dict
+    peak_memory: int | None      # per-device, bytes (None if unavailable)
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops / PEAK_FLOPS
+
+    @property
+    def t_memory(self) -> float:
+        return self.hbm_bytes / HBM_BW
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    def row(self) -> dict:
+        return {
+            "flops": self.flops, "hbm_bytes": self.hbm_bytes,
+            "coll_bytes": self.coll_bytes,
+            "t_compute": self.t_compute, "t_memory": self.t_memory,
+            "t_collective": self.t_collective, "dominant": self.dominant,
+            "peak_memory": self.peak_memory,
+            **{f"coll_{k}": v for k, v in self.coll_breakdown.items()},
+        }
+
+
+def analyze(compiled) -> Roofline:
+    """Roofline terms from the compiled SPMD module.
+
+    FLOPs / HBM bytes / collective bytes come from the trip-count-aware HLO
+    analyzer (hlo_analysis.py) -- compiled.cost_analysis() counts scan bodies
+    once and is kept only as a cross-check."""
+    from repro.launch.hlo_analysis import analyze_hlo
+    h = analyze_hlo(compiled.as_text())
+    peak = None
+    try:
+        ma = compiled.memory_analysis()
+        peak = int(ma.temp_size_in_bytes + ma.argument_size_in_bytes +
+                   ma.output_size_in_bytes - ma.alias_size_in_bytes)
+    except Exception:
+        pass
+    return Roofline(flops=h.flops, hbm_bytes=h.hbm_bytes,
+                    coll_bytes=int(h.coll_bytes),
+                    coll_breakdown=h.coll_breakdown, peak_memory=peak)
+
+
+def model_flops_per_step(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N_active*D tokens (train: x3 for fwd+bwd... the paper
+    of record uses 6ND for train incl. backward; forward-only is 2ND)."""
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (shape.seq_len if shape.kind != "decode" else 1)
+    if shape.kind == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens

@@ -1,0 +1,211 @@
+"""Sharding rules: params / optimizer state / batches / caches -> NamedSharding.
+
+Baseline layout (EXPERIMENTS.md records hillclimbs against this):
+  * activations: batch over (pod, data); d_model replicated over model.
+  * attention/MLP weights: 2-D sharded -- contracting (d_model-like) dim over
+    the FSDP axes (pod, data), output (heads/ffn) dim over `model` (TP).
+  * MoE expert weights: experts over `model` when E % 16 == 0 (EP), else
+    per-expert TP (f over model); d_model over FSDP axes either way
+    (explicit all-gather inside the block's shard_map).
+  * SSM / RG-LRU: inner width over `model` (recurrence needs no collectives).
+  * PEFT adapters (TT factors): fully replicated -- their gradient
+    all-reduce is the FedTT up-link.
+  * KV caches: batch over (pod, data) when divisible, head_dim over model.
+
+Any axis that does not divide a dimension is dropped to replication
+automatically (e.g. hubert's vocab=504 on a 16-way axis).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    return dim % int(np.prod([mesh.shape[a] for a in axes])) == 0
+
+
+def spec_of(mesh: Mesh, shape: tuple[int, ...], wanted: list) -> P:
+    """PartitionSpec from per-dim wishes, dropping non-dividing axes."""
+    out = []
+    for dim, w in zip(shape, wanted):
+        out.append(w if w and _fits(dim, mesh, w) else None)
+    return P(*out)
+
+
+def _rule(mesh: Mesh, fsdp, path: str, shape: tuple[int, ...],
+          cfg: ModelConfig | None = None) -> P:
+    """Sharding rule keyed on the param path (see module docstring)."""
+    leaf = path.split("/")[-1]
+    in_peft = path.startswith("peft")
+    if in_peft:
+        return P()                                   # adapters replicated
+    n = len(shape)
+    # GQA: k/v projections stay model-replicated (heads are repeated to H at
+    # compute time and H is what shards); q/o shard heads iff H % model == 0.
+    h_ok = cfg is None or (cfg.n_heads * cfg.hd) % mesh.shape["model"] == 0 \
+        and cfg.n_heads % mesh.shape["model"] == 0
+
+    if leaf == "embed":
+        return spec_of(mesh, shape, ["model", fsdp])
+    if leaf == "head":
+        return spec_of(mesh, shape, [fsdp, "model"])
+    if leaf in ("final_norm",):
+        return P()
+
+    # Everything below is stacked with a leading L axis (never sharded).
+    def stacked(wanted):
+        return spec_of(mesh, shape, [None] * (n - len(wanted)) + wanted)
+
+    # --- attention
+    if leaf == "wq":
+        return stacked([fsdp, "model" if h_ok else None])
+    if leaf in ("wk", "wv"):
+        return stacked([fsdp, None])
+    if leaf == "wo":
+        return stacked(["model" if h_ok else None, fsdp])
+    if leaf == "bq":
+        return stacked(["model" if h_ok else None])
+    if leaf in ("bk", "bv"):
+        return P()
+    if leaf in ("q_norm", "k_norm", "ln", "ln1", "ln2", "ln_mlp",
+                "gate_attn", "gate_mlp", "conv_b", "b_down", "dt_bias",
+                "gate_a_b", "gate_x_b", "lambda", "D"):
+        return P()
+    # --- dense MLP
+    if leaf in ("w_gate", "w_up") and "moe" not in path:
+        return stacked([fsdp, "model"])
+    if leaf == "w_down" and "moe" not in path:
+        return stacked(["model", fsdp])
+    if leaf == "b_up":
+        return stacked(["model"])
+    # --- MoE (shard_map reshards at the block boundary; see models/moe.py)
+    if "moe" in path:
+        if leaf == "router":
+            return P()
+        e = shape[1]
+        ep = e % mesh.shape["model"] == 0
+        if leaf in ("w_gate", "w_up"):               # (L, E, d, f)
+            return stacked(["model", fsdp, None] if ep else [None, fsdp, "model"])
+        if leaf == "w_down":                          # (L, E, f, d)
+            return stacked(["model", None, fsdp] if ep else [None, "model", fsdp])
+    # --- Mamba
+    if leaf == "in_proj":
+        return stacked([fsdp, "model"])
+    if leaf == "conv_w":
+        return stacked([None, "model"])
+    if leaf == "x_proj":
+        return stacked(["model", None])
+    if leaf == "dt_proj":
+        return stacked([None, "model"])
+    if leaf == "A_log":
+        return stacked(["model", None])
+    if leaf == "out_proj":
+        return stacked(["model", fsdp])
+    # --- RG-LRU
+    if leaf in ("in_x", "in_gate"):
+        return stacked([fsdp, "model"])
+    if leaf in ("gate_a", "gate_x"):                  # (L, nb, wb, wb)
+        return stacked(["model", None, None])
+    if leaf == "out":
+        return stacked(["model", fsdp])
+    return P()
+
+
+def _paths(tree) -> list[tuple[str, tuple[int, ...]]]:
+    out = []
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append((key, leaf.shape))
+    return out
+
+
+def _rule_fsdp2(mesh: Mesh, axes_a, axes_b, path: str, shape: tuple[int, ...],
+                cfg: ModelConfig | None = None) -> P:
+    """Pure-FSDP strategy (hillclimb H1): no tensor parallelism -- both mesh
+    axes act as data parallelism for activations, and every large weight is
+    2-D sharded (first large dim over `axes_a`, second over `axes_b`).
+    XLA all-gathers each layer's weights at use; there are NO per-layer
+    activation all-reduces."""
+    if path.startswith("peft"):
+        return P()
+    dims = len(shape)
+    if dims == 0 or max(shape) < 1024 and dims == 1:
+        return P()
+    # stacked (L, ...) tensors: skip the leading L dim
+    start = 1 if dims >= 3 else 0
+    big = [(i, s) for i, s in enumerate(shape[start:], start)]
+    big.sort(key=lambda t: -t[1])
+    wanted = [None] * dims
+    if big:
+        wanted[big[0][0]] = axes_a
+    if len(big) > 1:
+        wanted[big[1][0]] = axes_b
+    return spec_of(mesh, shape, wanted)
+
+
+def param_shardings(mesh: Mesh, params_shape, fsdp,
+                    cfg: ModelConfig | None = None,
+                    strategy: str = "tp_fsdp") -> dict:
+    """NamedSharding pytree matching a model_init-shaped pytree (built from
+    jax.eval_shape output, so no allocation is needed).
+
+    strategy: "tp_fsdp" (baseline: TP over `model` + FSDP over (pod,)data) or
+    "fsdp" (pure FSDP over both axes, no TP)."""
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        if strategy == "fsdp":
+            spec = _rule_fsdp2(mesh, fsdp, "model", key, leaf.shape, cfg)
+        else:
+            spec = _rule(mesh, fsdp, key, leaf.shape, cfg)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def replicated(mesh: Mesh, tree_shape):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree_shape)
+
+
+def cache_shardings(mesh: Mesh, cfg: ModelConfig, cache_shape, batch_axes) -> dict:
+    """Cache sharding: batch over (pod, data) if divisible, width over model."""
+    def rule(path: str, shape):
+        leaf = path.split("/")[-1]
+        b_ok = batch_axes if _fits(shape[1], mesh, batch_axes) else None
+        # KV cache: sequence-sharded over `model` (C % 16 == 0 for all our
+        # cache lengths) -- decode softmax/out reductions over C are tiny
+        # collectives, vs. the giant score all-reduces head_dim-sharding costs.
+        if leaf in ("k", "v", "img_k", "img_v"):      # (L, B, C, KV, hd)
+            return spec_of(mesh, shape, [None, b_ok, "model", None, None])
+        if leaf == "pos":                              # (L, B, C)
+            return spec_of(mesh, shape, [None, b_ok, "model"])
+        if leaf == "h" and len(shape) == 4:            # mamba (L, B, d_in, N)
+            return spec_of(mesh, shape, [None, b_ok, "model", None])
+        if leaf == "h":                                # rglru (L, B, w)
+            return spec_of(mesh, shape, [None, b_ok, "model"])
+        if leaf == "conv":                             # (L, B, dc, width)
+            return spec_of(mesh, shape, [None, b_ok, None, "model"])
+        return P()
+
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    out = []
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        out.append(NamedSharding(mesh, rule(key, leaf.shape)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(mesh: Mesh, batch_shape, batch_axes) -> dict:
+    """tokens/labels (B, S) or embeds (B, S, d): batch dim over (pod, data)."""
+    def rule(shape):
+        b_ok = batch_axes if _fits(shape[0], mesh, batch_axes) else None
+        return spec_of(mesh, shape, [b_ok] + [None] * (len(shape) - 1))
+    return jax.tree.map(lambda s: NamedSharding(mesh, rule(s.shape)), batch_shape)

@@ -1,0 +1,285 @@
+"""Shared model components: RMSNorm, RoPE, GQA attention (full / chunked /
+sliding-window / cached decode), gated MLP.  Pure functional JAX.
+
+Attention is implemented with an online-softmax scan over KV chunks so 32k
+prefill never materializes an (S, S) score matrix -- the TPU-idiomatic
+flash-attention formulation at the XLA level (the Pallas budget of this repo
+belongs to the paper's own hot-spot, the TT contraction -- see DESIGN.md).
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Norms / positional
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps).astype(x.dtype)) * scale
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, hd), positions: (B, S) or (S,)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                      # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, hd/2) or (S, hd/2)
+    if ang.ndim == 2:
+        ang = ang[None]
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention params
+# ---------------------------------------------------------------------------
+
+def attn_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32,
+              kv_source_dim: int | None = None) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    d_kv_src = kv_source_dim or d
+    ks = jax.random.split(key, 4)
+    init = lambda k, fan_in, shape: (jax.random.normal(k, shape) / math.sqrt(fan_in)).astype(dtype)
+    p = {
+        "wq": init(ks[0], d, (d, h * hd)),
+        "wk": init(ks[1], d_kv_src, (d_kv_src, kv * hd)),
+        "wv": init(ks[2], d_kv_src, (d_kv_src, kv * hd)),
+        "wo": init(ks[3], h * hd, (h * hd, d)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((kv * hd,), dtype)
+        p["bv"] = jnp.zeros((kv * hd,), dtype)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ModelConfig, x: jax.Array,
+                 kv_x: jax.Array | None = None, peft: dict | None = None):
+    """Returns q (B,S,H,hd), k,v (B,Skv,KV,hd). LoRA deltas hook on q and v."""
+    from repro.core.peft import LoRASpec, lora_delta
+
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kv_x = x if kv_x is None else kv_x
+    q = x @ p["wq"]
+    k = kv_x @ p["wk"]
+    v = kv_x @ p["wv"]
+    if peft and "lora_q" in peft:
+        spec_q = LoRASpec(cfg.d_model, h * hd, cfg.peft.lora_rank, cfg.peft.lora_alpha)
+        spec_v = LoRASpec(kv_x.shape[-1], kv * hd, cfg.peft.lora_rank, cfg.peft.lora_alpha)
+        q = q + lora_delta(peft["lora_q"], spec_q, x)
+        v = v + lora_delta(peft["lora_v"], spec_v, kv_x)
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(q.shape[:-1] + (h, hd))
+    k = k.reshape(k.shape[:-1] + (kv, hd))
+    v = v.reshape(v.shape[:-1] + (kv, hd))
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    return q, k, v
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,H,hd), k: (B,Sk,KV,hd) -> (B, KV, g, Sq, Sk).  Decode path."""
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, sq, kvh, g, hd)
+    return jnp.einsum("bqkgd,bskd->bkgqs", qg, k) / math.sqrt(hd)
+
+
+def _gqa_out(probs: jax.Array, v: jax.Array) -> jax.Array:
+    """probs: (B,KV,g,Sq,Sk), v: (B,Sk,KV,hd) -> (B,Sq,H,hd).  Decode path."""
+    b, kvh, g, sq, sk = probs.shape
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, kvh * g, v.shape[-1])
+
+
+def full_attention(q, k, v, q_pos, k_pos, causal: bool, window: int | None) -> jax.Array:
+    """Reference (unchunked) attention.  q,k,v: (B,S,H,hd) -- KV heads
+    already repeated to H (TP shards H over `model`)."""
+    hd = q.shape[-1]
+    scores = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) / math.sqrt(hd)
+    mask = jnp.ones((q.shape[1], k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window is not None:
+        mask &= q_pos[:, None] - k_pos[None, :] < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqs,bshd->bqhd", probs, v)
+
+
+def chunked_attention(q, k, v, q_pos, k_pos, causal: bool, window: int | None,
+                      kv_chunk: int = 2048) -> jax.Array:
+    """Online-softmax attention scanning KV chunks; never forms (Sq, Sk).
+
+    q, k, v: (B,S,H,hd) (KV heads pre-repeated).  The mask is recomputed per
+    chunk from positions (cheap) so XLA cannot hoist a stacked
+    (n_chunks, ..., Sq, kc) mask into the loop carry."""
+    b, sq, h, hd = q.shape
+    sk = k.shape[1]
+    if sk <= kv_chunk or sk % kv_chunk != 0:
+        # short or non-divisible KV (e.g. 1601 image tokens): single pass
+        return full_attention(q, k, v, q_pos, k_pos, causal, window)
+    n_chunks = sk // kv_chunk
+
+    kc = k.reshape(b, n_chunks, kv_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n_chunks, kv_chunk, h, hd).transpose(1, 0, 2, 3, 4)
+
+    m0 = jnp.full((b, h, sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((b, h, sq), jnp.float32)
+    acc0 = jnp.zeros((b, h, sq, hd), jnp.float32)
+
+    def step(carry, xs):
+        m, l, acc, j = carry
+        kj, vj = xs
+        s = jnp.einsum("bqhd,bshd->bhqs", q, kj).astype(jnp.float32) / math.sqrt(hd)
+        kpj = k_pos[0] + j * kv_chunk + jnp.arange(kv_chunk)   # contiguous chunks
+        mask = jnp.ones((sq, kv_chunk), bool)
+        if causal:
+            mask = mask & (q_pos[:, None] >= kpj[None, :])
+        if window is not None:
+            mask = mask & (q_pos[:, None] - kpj[None, :] < window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        pj = jnp.exp(s - m_new[..., None])
+        scale = jnp.exp(m - m_new)
+        l_new = l * scale + pj.sum(axis=-1)
+        acc_new = acc * scale[..., None] + jnp.einsum(
+            "bhqs,bshd->bhqd", pj.astype(q.dtype), vj).astype(jnp.float32)
+        return (m_new, l_new, acc_new, j + 1), None
+
+    # remat each kv chunk: backward recomputes the (B,H,Sq,kc) probs instead
+    # of scan-AD stacking them (n_chunks, B, H, Sq, kc).
+    (m, l, acc, _), _ = jax.lax.scan(
+        jax.checkpoint(step), (m0, l0, acc0, jnp.zeros((), jnp.int32)), (kc, vc))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)      # (B,Sq,H,hd)
+
+
+def _shard_attn(q, k, v, cfg: ModelConfig, dist) -> tuple:
+    """TP layout for attention activations (DESIGN.md §5).
+
+    H % model == 0: shard heads over `model` (k/v repeated first, so each
+    device holds only its own repeated heads).  Otherwise (e.g. 40 heads on a
+    16-wide axis): context-parallel fallback -- shard the query/sequence dim
+    over `model`, keep k/v replicated."""
+    if dist is None:
+        return q, k, v
+    import numpy as _np
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = dist.mesh
+    baxes = dist.batch_axes
+    bsz = int(_np.prod([mesh.shape[a] for a in baxes]))
+    b_ax = (baxes if q.shape[0] % bsz == 0 else None) or None
+    if not dist.tp:                         # pure-FSDP: batch-only sharding
+        spec = P(b_ax, None, None, None)
+        cst = lambda t: jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+        return cst(q), cst(k), cst(v)
+    h = q.shape[2]
+    if h % dist.model_size == 0:
+        spec = P(b_ax, None, "model", None)
+        cst = lambda t: jax.lax.with_sharding_constraint(t, NamedSharding(mesh, spec))
+        return cst(q), cst(k), cst(v)
+    if q.shape[1] % dist.model_size == 0:   # context parallel on Sq
+        qspec = P(b_ax, "model", None, None)
+        kspec = P(b_ax, None, None, None)
+        q = jax.lax.with_sharding_constraint(q, NamedSharding(mesh, qspec))
+        k = jax.lax.with_sharding_constraint(k, NamedSharding(mesh, kspec))
+        v = jax.lax.with_sharding_constraint(v, NamedSharding(mesh, kspec))
+    return q, k, v
+
+
+def attn_apply(p: dict, cfg: ModelConfig, x: jax.Array, positions: jax.Array,
+               causal: bool, window: int | None = None,
+               kv_x: jax.Array | None = None, kv_positions: jax.Array | None = None,
+               peft: dict | None = None, use_rope: bool = True,
+               dist=None) -> jax.Array:
+    """Self- or cross-attention over full sequences (train / prefill)."""
+    q, k, v = _project_qkv(p, cfg, x, kv_x=kv_x, peft=peft)
+    k_pos = positions if kv_positions is None else kv_positions
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, k_pos, cfg.rope_theta)
+    g = q.shape[2] // k.shape[2]
+    if g > 1:                               # repeat KV heads for TP layout
+        k = jnp.repeat(k, g, axis=2)
+        v = jnp.repeat(v, g, axis=2)
+    q, k, v = _shard_attn(q, k, v, cfg, dist)
+    out = chunked_attention(q, k, v, positions, k_pos, causal, window)
+    return out.reshape(out.shape[:2] + (-1,)) @ p["wo"]
+
+
+def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+                cache: dict, window: int | None = None,
+                peft: dict | None = None) -> tuple[jax.Array, dict]:
+    """One-token decode against a (possibly ring-buffered) KV cache.
+
+    x: (B, 1, d); pos: (B,) absolute position of the new token.
+    cache: {"k","v": (B, C, KV, hd), "pos": (B, C) int32 absolute positions,
+    -1 where empty}.  C == window for SWA (ring buffer) else max_seq.
+    """
+    b = x.shape[0]
+    q, k_new, v_new = _project_qkv(p, cfg, x, peft=peft)
+    q = apply_rope(q, pos[:, None], cfg.rope_theta)
+    k_new = apply_rope(k_new, pos[:, None], cfg.rope_theta)
+
+    cap = cache["k"].shape[1]
+    slot = (pos % cap).astype(jnp.int32)                 # ring slot
+    bidx = jnp.arange(b)
+    k = cache["k"].at[bidx, slot].set(k_new[:, 0])
+    v = cache["v"].at[bidx, slot].set(v_new[:, 0])
+    kpos = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32))
+
+    scores = _gqa_scores(q, k).astype(jnp.float32)       # (B,KV,g,1,C)
+    valid = kpos >= 0
+    caus = kpos <= pos[:, None]
+    mask = valid & caus
+    if window is not None:
+        mask &= (pos[:, None] - kpos) < window
+    scores = jnp.where(mask[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v)
+    y = out.reshape(b, 1, -1) @ p["wo"]
+    return y, {"k": k, "v": v, "pos": kpos}
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32,
+             d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    init = lambda k, fan_in, shape: (jax.random.normal(k, shape) / math.sqrt(fan_in)).astype(dtype)
+    if cfg.gated_mlp:
+        return {"w_gate": init(ks[0], d, (d, f)),
+                "w_up": init(ks[1], d, (d, f)),
+                "w_down": init(ks[2], f, (f, d))}
+    return {"w_up": init(ks[0], d, (d, f)), "b_up": jnp.zeros((f,), dtype),
+            "w_down": init(ks[1], f, (f, d)), "b_down": jnp.zeros((d,), dtype)}
+
+
+def mlp_apply(p: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    if cfg.gated_mlp:
+        return (jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])) @ p["w_down"]
+    h = jax.nn.gelu(x @ p["w_up"] + p["b_up"])
+    return h @ p["w_down"] + p["b_down"]

@@ -1,0 +1,143 @@
+"""Mamba-1 selective SSM (Falcon-Mamba) in JAX.
+
+Training/prefill uses a *chunked associative scan*: the sequence is processed
+in time chunks; inside a chunk the diagonal recurrence
+``h_t = dA_t * h_{t-1} + dB_t x_t`` runs as a `jax.lax.associative_scan`, and
+chunk-boundary states are carried by an outer `lax.scan`.  This bounds the
+materialized state tensor to (B, chunk, d_inner, N) -- the TPU adaptation of
+the CUDA selective-scan kernel (DESIGN.md §2): VMEM-sized chunks instead of
+warp-level recurrence.  Decode is the exact single-step recurrence with a
+(B, d_inner, N) state + a (B, d_conv-1, d_inner) conv tail.
+
+The recurrence is elementwise in d_inner, so sharding d_inner over the
+`model` axis needs **zero collectives** inside the scan.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm or SSMConfig()
+    d_in = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or math.ceil(cfg.d_model / 16)
+    return s, d_in, dt_rank
+
+
+def mamba_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    s, d_in, dtr = _dims(cfg)
+    d, n = cfg.d_model, s.d_state
+    ks = jax.random.split(key, 6)
+    init = lambda k, fan_in, shape: (jax.random.normal(k, shape) / math.sqrt(fan_in)).astype(dtype)
+    # S4D-real initialization for A
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (d_in, 1))
+    dt_bias = jnp.log(jnp.expm1(
+        jnp.exp(jax.random.uniform(ks[5], (d_in,), minval=math.log(1e-3),
+                                   maxval=math.log(1e-1)))))
+    return {
+        "in_proj": init(ks[0], d, (d, 2 * d_in)),
+        "conv_w": init(ks[1], s.d_conv, (s.d_conv, d_in)),
+        "conv_b": jnp.zeros((d_in,), dtype),
+        "x_proj": init(ks[2], d_in, (d_in, dtr + 2 * n)),
+        "dt_proj": init(ks[3], dtr, (dtr, d_in)),
+        "dt_bias": dt_bias.astype(dtype),
+        "A_log": jnp.log(a).astype(dtype),
+        "D": jnp.ones((d_in,), dtype),
+        "out_proj": init(ks[4], d_in, (d_in, d)),
+    }
+
+
+def _ssm_inputs(p: dict, cfg: ModelConfig, xb: jax.Array):
+    """xb: (..., S, d_in) post-conv activations -> (dA, dBx, C, D*x) pieces."""
+    s, d_in, dtr = _dims(cfg)
+    n = s.d_state
+    proj = xb @ p["x_proj"]                                # (..., S, dtr + 2n)
+    dt_raw, b_ssm, c_ssm = jnp.split(proj, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # (..., S, d_in)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))           # (d_in, N)
+    da = jnp.exp(dt[..., None].astype(jnp.float32) * a)    # (..., S, d_in, N)
+    dbx = (dt * xb)[..., None] * b_ssm[..., None, :]       # (..., S, d_in, N)
+    return da, dbx.astype(jnp.float32), c_ssm
+
+
+def _causal_conv(p: dict, cfg: ModelConfig, x: jax.Array,
+                 tail: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv over time.  x: (B, S, d_in).  `tail` is the
+    previous d_conv-1 inputs for streaming decode."""
+    s, _, _ = _dims(cfg)
+    w = p["conv_w"]                                        # (d_conv, d_in)
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], s.d_conv - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = tail
+    xp = jnp.concatenate([pad, x], axis=1)                 # (B, S + dc-1, d_in)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(s.d_conv))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def mamba_mixer(p: dict, cfg: ModelConfig, x: jax.Array,
+                chunk: int | None = None) -> jax.Array:
+    """Full-sequence mixer.  x: (B, S, d) -> (B, S, d)."""
+    b, sl, d = x.shape
+    xz = x @ p["in_proj"]
+    xb, z = jnp.split(xz, 2, axis=-1)                      # (B, S, d_in) each
+    xb = _causal_conv(p, cfg, xb)
+
+    s, d_in, _ = _dims(cfg)
+    n = s.d_state
+    chunk = min(chunk or s.chunk, sl)
+    assert sl % chunk == 0, (sl, chunk)
+    nc = sl // chunk
+    scan_dtype = jnp.bfloat16 if s.scan_bf16 else jnp.float32
+
+    # chunk the *inputs* (cheap projections) and contract C inside the chunk
+    # so the (B, chunk, d_in, N) state tensor never exists for the full
+    # sequence; jax.checkpoint recomputes it in backward.
+    xbc = xb.reshape(b, nc, chunk, d_in).transpose(1, 0, 2, 3)
+
+    def chunk_step(h0, xb_c):
+        da_c, db_c, c_c = _ssm_inputs(p, cfg, xb_c)        # (B, chunk, d_in, N)
+        da_c = da_c.astype(scan_dtype)
+        db_c = db_c.astype(scan_dtype)
+
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        cum_a, cum_b = jax.lax.associative_scan(combine, (da_c, db_c), axis=1)
+        h = cum_a.astype(jnp.float32) * h0[:, None] + cum_b.astype(jnp.float32)
+        y_c = jnp.einsum("bsdn,bsn->bsd", h, c_c.astype(jnp.float32))
+        return h[:, -1], y_c
+
+    h0 = jnp.zeros((b, d_in, n), jnp.float32)
+    step_fn = jax.checkpoint(chunk_step) if s.inner_remat else chunk_step
+    _, ys = jax.lax.scan(step_fn, h0, xbc)                 # (nc, B, chunk, d_in)
+    y = ys.transpose(1, 0, 2, 3).reshape(b, sl, d_in).astype(x.dtype)
+    y = y + xb * p["D"]
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def mamba_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                 cache: dict) -> tuple[jax.Array, dict]:
+    """One-token decode.  x: (B, 1, d); cache = {"h": (B,d_in,N) f32,
+    "conv": (B, d_conv-1, d_in)}."""
+    s, d_in, _ = _dims(cfg)
+    xz = x @ p["in_proj"]
+    xb, z = jnp.split(xz, 2, axis=-1)                      # (B, 1, d_in)
+    conv_tail = cache["conv"]
+    xb_c = _causal_conv(p, cfg, xb, tail=conv_tail)        # (B, 1, d_in)
+    new_tail = jnp.concatenate([conv_tail[:, 1:], xb], axis=1)
+
+    da, dbx, c_ssm = _ssm_inputs(p, cfg, xb_c)             # (B,1,d_in,N)
+    h = da[:, 0] * cache["h"] + dbx[:, 0]                  # (B, d_in, N)
+    y = jnp.einsum("bdn,bn->bd", h, c_ssm[:, 0].astype(jnp.float32)).astype(x.dtype)
+    y = y[:, None] + xb_c * p["D"]
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], {"h": h, "conv": new_tail}

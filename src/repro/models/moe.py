@@ -1,0 +1,275 @@
+"""Mixture-of-Experts block: top-k router + scatter-based dispatch with
+expert parallelism over the `model` mesh axis.
+
+Design (see DESIGN.md §5): activations are batch-sharded over (pod, data) and
+replicated over `model`.  Inside a shard_map over the mesh, each model column
+owns E/ep experts (EP, when E % ep == 0) or an f/ep slice of every expert
+(per-expert TP otherwise, e.g. Mixtral's E=8 on a 16-wide axis).  Each device
+dispatches its local tokens into local (E_loc, C, d) buffers via scatter-add
+(never materializing a (T, E, C) dispatch one-hot), runs its expert shard, and
+the partial outputs are combined with a single psum over `model` -- the only
+collective the block needs.
+
+Capacity C = ceil(T_local * top_k / E * capacity_factor); overflow tokens are
+dropped from that expert (standard dropping MoE).  Aux load-balance loss is
+the Switch loss.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DistContext:
+    """Mesh context threaded through model apply fns.  None => single device."""
+    mesh: object                       # jax.sharding.Mesh
+    batch_axes: tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    fsdp_axes: tuple[str, ...] = ()    # axes expert weights are FSDP-sharded on
+    act_shard: bool = True             # shard residual stream d_model over model
+                                       # at block boundaries (remat-saved tensors)
+    tp: bool = True                    # tensor parallelism on `model` (False =
+                                       # pure-FSDP strategy: model axis is data)
+    tt_sharded: bool = True            # TT-sharded adapter application (psum of
+                                       # the rank-sized sliver vs (B,S,d) gather)
+
+    @property
+    def model_size(self) -> int:
+        return self.mesh.shape[self.model_axis]
+
+
+def moe_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    moe = cfg.moe
+    d, e, f = cfg.d_model, moe.n_experts, moe.d_expert
+    ks = jax.random.split(key, 4)
+    init = lambda k, fan_in, shape: (jax.random.normal(k, shape) / math.sqrt(fan_in)).astype(dtype)
+    p = {
+        "router": init(ks[0], d, (d, e)),
+        "w_up": init(ks[2], d, (e, d, f)),
+        "w_down": init(ks[3], f, (e, f, d)),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = init(ks[1], d, (e, d, f))
+    return p
+
+
+def _route(logits: jax.Array, k: int):
+    """logits (T, E) -> (gate (T,k), expert_id (T,k), aux loss)."""
+    e = logits.shape[-1]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(top_e, e, dtype=jnp.float32), axis=1), axis=0)
+    aux = e * jnp.sum(me * ce)
+    return top_p, top_e, aux
+
+
+def _expert_ffn(p: dict, cfg: ModelConfig, xe: jax.Array,
+                w_gate, w_up, w_down) -> jax.Array:
+    """xe: (E_loc, C, d) -> (E_loc, C, d) through the gated FFN."""
+    if cfg.gated_mlp:
+        he = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, w_gate))
+        he = he * jnp.einsum("ecd,edf->ecf", xe, w_up)
+    else:
+        he = jax.nn.gelu(jnp.einsum("ecd,edf->ecf", xe, w_up))
+    return jnp.einsum("ecf,efd->ecd", he, w_down)
+
+
+def _moe_local(p: dict, cfg: ModelConfig, x: jax.Array, *,
+               n_local_experts: int, expert_offset: jax.Array | int,
+               capacity_factor: float, min_capacity: int) -> tuple[jax.Array, jax.Array]:
+    """Dispatch local tokens to the locally-owned expert slice via scatter.
+
+    x: (T, d).  Returns (partial y (T, d), aux).  Tokens routed to experts
+    outside [offset, offset + n_local) contribute zero here and are picked up
+    by the owning model column (combined by the caller's psum).
+    """
+    moe = cfg.moe
+    t, d = x.shape
+    k = moe.top_k
+    logits = x @ p["router"]
+    gate, eid, aux = _route(logits, k)                    # (T,k)
+
+    cap = max(int(math.ceil(t * k / moe.n_experts * capacity_factor)), min_capacity)
+    flat_e = eid.reshape(-1)                              # (T*k,) global expert ids
+    local_e = flat_e - expert_offset
+    mine = (local_e >= 0) & (local_e < n_local_experts)
+    local_e = jnp.where(mine, local_e, 0)
+
+    # position of each (token, slot) within its expert's capacity buffer
+    onehot = jax.nn.one_hot(local_e, n_local_experts, dtype=jnp.int32) * mine[:, None]
+    pos = (jnp.cumsum(onehot, axis=0) - 1)
+    pos = jnp.take_along_axis(pos, local_e[:, None], axis=1)[:, 0]      # (T*k,)
+    keep = mine & (pos >= 0) & (pos < cap)
+    pos_c = jnp.where(keep, pos, cap)                     # park drops in slot `cap`
+
+    # scatter per top-k slot -- never materializes a (T*k, d) token copy
+    local_e2 = local_e.reshape(t, k)
+    pos_c2 = pos_c.reshape(t, k)
+    keep2 = keep.reshape(t, k)
+    xe = jnp.zeros((n_local_experts, cap + 1, d), x.dtype)
+    for j in range(k):
+        xe = xe.at[local_e2[:, j], pos_c2[:, j]].add(
+            x * keep2[:, j, None].astype(x.dtype))
+    xe = xe[:, :cap]                                      # drop the park slot
+
+    ye = _expert_ffn(p, cfg, xe, p.get("w_gate"), p["w_up"], p["w_down"])
+
+    ye = jnp.pad(ye, ((0, 0), (0, 1), (0, 0)))            # re-add park slot (zeros)
+    y = jnp.zeros((t, d), x.dtype)
+    for j in range(k):
+        w = (gate[:, j, None] * keep2[:, j, None]).astype(x.dtype)
+        y = y + ye[local_e2[:, j], pos_c2[:, j]] * w
+    return y, aux
+
+
+def _moe_local_tp(p: dict, cfg: ModelConfig, x: jax.Array, *,
+                  capacity_factor: float, min_capacity: int) -> tuple[jax.Array, jax.Array]:
+    """Per-expert TP path: every device holds all experts with an f-slice.
+
+    The expert weights arrive already f-sliced (shard_map in_specs); the
+    down-projection output is a partial sum over f, combined by the caller's
+    psum -- identical combine to the EP path.
+    """
+    moe = cfg.moe
+    t, d = x.shape
+    k = moe.top_k
+    logits = x @ p["router"]
+    gate, eid, aux = _route(logits, k)
+
+    cap = max(int(math.ceil(t * k / moe.n_experts * capacity_factor)), min_capacity)
+    flat_e = eid.reshape(-1)
+    onehot = jax.nn.one_hot(flat_e, moe.n_experts, dtype=jnp.int32)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1, flat_e[:, None], axis=1)[:, 0]
+    keep = pos < cap
+    pos_c = jnp.where(keep, pos, cap)
+
+    eid2 = flat_e.reshape(t, k)
+    pos_c2 = pos_c.reshape(t, k)
+    keep2 = keep.reshape(t, k)
+    xe = jnp.zeros((moe.n_experts, cap + 1, d), x.dtype)
+    for j in range(k):
+        xe = xe.at[eid2[:, j], pos_c2[:, j]].add(
+            x * keep2[:, j, None].astype(x.dtype))
+    xe = xe[:, :cap]
+
+    ye = _expert_ffn(p, cfg, xe, p.get("w_gate"), p["w_up"], p["w_down"])
+    ye = jnp.pad(ye, ((0, 0), (0, 1), (0, 0)))
+    y = jnp.zeros((t, d), x.dtype)
+    for j in range(k):
+        w = (gate[:, j, None] * keep2[:, j, None]).astype(x.dtype)
+        y = y + ye[eid2[:, j], pos_c2[:, j]] * w
+    return y, aux
+
+
+def moe_uses_ep(cfg: ModelConfig, model_size: int) -> bool:
+    return cfg.moe.n_experts % model_size == 0
+
+
+MOE_TOKEN_CHUNK = 4096
+
+
+def _chunked(local_fn, xt: jax.Array, chunk: int = MOE_TOKEN_CHUNK):
+    """Microbatch the MoE over token chunks (bounds the (E, C, d) dispatch
+    buffers to chunk-sized capacity; capacity/drops are enforced per chunk,
+    as in group-wise Switch dispatch)."""
+    t, d = xt.shape
+    if t <= chunk or t % chunk != 0:
+        return local_fn(xt)
+    n = t // chunk
+
+    def step(_, xc):
+        y, aux = local_fn(xc)
+        return None, (y, aux)
+
+    # remat per chunk: backward recomputes dispatch buffers instead of
+    # scan-AD saving every chunk's (E, C, d) residuals.
+    _, (ys, auxs) = jax.lax.scan(jax.checkpoint(step), None,
+                                 xt.reshape(n, chunk, d))
+    return ys.reshape(t, d), jnp.mean(auxs)
+
+
+def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array,
+              dist: DistContext | None = None,
+              capacity_factor: float | None = None,
+              min_capacity: int = 8) -> tuple[jax.Array, jax.Array]:
+    """x: (B, S, d) -> (y, aux).  Distributed when `dist` is given."""
+    if capacity_factor is None:
+        capacity_factor = cfg.moe.capacity_factor
+    b, s, d = x.shape
+    if dist is None or dist.model_size == 1:
+        y, aux = _moe_local(
+            p, cfg, x.reshape(-1, d), n_local_experts=cfg.moe.n_experts,
+            expert_offset=0, capacity_factor=capacity_factor,
+            min_capacity=min_capacity)
+        return y.reshape(b, s, d), aux
+
+    ep = dist.model_size
+    mesh, maxis, baxes = dist.mesh, dist.model_axis, dist.batch_axes
+    fsdp_size = int(np.prod([mesh.shape[a] for a in dist.fsdp_axes])) if dist.fsdp_axes else 1
+    fsdp = tuple(dist.fsdp_axes) if (dist.fsdp_axes and d % fsdp_size == 0) else ()
+    use_ep = moe_uses_ep(cfg, ep)
+    e_loc = cfg.moe.n_experts // ep if use_ep else cfg.moe.n_experts
+
+    baxes_size = int(np.prod([mesh.shape[a] for a in baxes])) if baxes else 1
+    xspec = P(baxes, None, None) if (baxes and b % baxes_size == 0) \
+        else P(None, None, None)
+    # Expert weights arrive sharded: E over model (EP) or f over model (TP),
+    # plus d_model FSDP-sharded over `fsdp` -- explicitly all-gathered below
+    # (the per-layer FSDP all-gather).
+    if use_ep:
+        wspec = {"router": P(None),
+                 "w_up": P(maxis, fsdp if fsdp else None, None),
+                 "w_down": P(maxis, None, fsdp if fsdp else None)}
+        if "w_gate" in p:
+            wspec["w_gate"] = P(maxis, fsdp if fsdp else None, None)
+    else:
+        wspec = {"router": P(None),
+                 "w_up": P(None, fsdp if fsdp else None, maxis),
+                 "w_down": P(None, maxis, fsdp if fsdp else None)}
+        if "w_gate" in p:
+            wspec["w_gate"] = P(None, fsdp if fsdp else None, maxis)
+
+    def local_fn(p_loc, x_loc):
+        bl = x_loc.shape[0]
+        xt = x_loc.reshape(-1, d)
+        if fsdp:  # FSDP all-gather of the d_model dim before use
+            p_loc = dict(
+                p_loc,
+                w_up=jax.lax.all_gather(p_loc["w_up"], fsdp, axis=1, tiled=True),
+                w_down=jax.lax.all_gather(p_loc["w_down"], fsdp, axis=2, tiled=True))
+            if "w_gate" in p_loc:
+                p_loc["w_gate"] = jax.lax.all_gather(
+                    p_loc["w_gate"], fsdp, axis=1, tiled=True)
+        if use_ep:
+            idx = jax.lax.axis_index(maxis)
+            y, aux = _chunked(
+                lambda xc: _moe_local(
+                    p_loc, cfg, xc, n_local_experts=e_loc,
+                    expert_offset=idx * e_loc, capacity_factor=capacity_factor,
+                    min_capacity=min_capacity), xt)
+        else:
+            y, aux = _chunked(
+                lambda xc: _moe_local_tp(
+                    p_loc, cfg, xc, capacity_factor=capacity_factor,
+                    min_capacity=min_capacity), xt)
+        y = jax.lax.psum(y, maxis)                 # combine expert partials
+        # router runs redundantly on every model column -> aux identical there
+        aux = jax.lax.pmean(aux, maxis)
+        return y.reshape(bl, s, d), aux
+
+    y, aux = jax.shard_map(
+        local_fn, mesh=mesh, in_specs=(wspec, xspec),
+        out_specs=(xspec, P()), check_vma=False,
+    )(p, x)
+    return y, jnp.mean(aux)

@@ -1,0 +1,97 @@
+"""Glue wiring PEFT methods into model blocks.
+
+Every block exposes two hook points (post-attention, post-MLP) plus LoRA
+deltas inside the q/v projections.  Which hooks are populated depends on
+``cfg.peft.method``:
+
+  fedtt / fedtt_plus -> tensorized adapters at both hooks (paper Fig. 1b)
+  adapter            -> dense Houlsby adapters at both hooks
+  lora / ffa_lora / rolora -> lora_q + lora_v inside attention
+  bitfit             -> no extra params here (backbone biases become trainable)
+  prompt             -> no per-block params (soft tokens at the embedding)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.adapters import AdapterSpec, adapter_apply, adapter_init
+from repro.core.peft import (DenseAdapterSpec, LoRASpec, dense_adapter_apply,
+                             dense_adapter_init)
+
+
+def adapter_spec(cfg: ModelConfig) -> AdapterSpec:
+    return AdapterSpec(cfg.d_model, cfg.peft.bottleneck, cfg.peft.tt_rank,
+                       use_kernel=cfg.peft.use_kernel)
+
+
+def block_peft_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32,
+                    kv_dim: int | None = None) -> dict:
+    """PEFT params for one encoder/decoder block."""
+    m = cfg.peft.method
+    k1, k2 = jax.random.split(key)
+    if m in ("fedtt", "fedtt_plus"):
+        spec = adapter_spec(cfg)
+        return {"adapter_attn": adapter_init(k1, spec, dtype),
+                "adapter_mlp": adapter_init(k2, spec, dtype)}
+    if m == "adapter":
+        spec = DenseAdapterSpec(cfg.d_model, cfg.peft.bottleneck)
+        return {"adapter_attn": dense_adapter_init(k1, spec, dtype),
+                "adapter_mlp": dense_adapter_init(k2, spec, dtype)}
+    if m in ("lora", "ffa_lora", "rolora"):
+        from repro.core.peft import lora_init
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        d_kv_src = kv_dim or cfg.d_model
+        sq = LoRASpec(cfg.d_model, h * hd, cfg.peft.lora_rank, cfg.peft.lora_alpha)
+        sv = LoRASpec(d_kv_src, kv * hd, cfg.peft.lora_rank, cfg.peft.lora_alpha)
+        return {"lora_q": lora_init(k1, sq, dtype), "lora_v": lora_init(k2, sv, dtype)}
+    if m in ("bitfit", "prompt", "none"):
+        return {}
+    raise ValueError(f"unknown peft method {m}")
+
+
+def apply_hook(peft: dict | None, cfg: ModelConfig, name: str, x: jax.Array,
+               dist=None) -> jax.Array:
+    """Apply the post-attn / post-mlp adapter hook, if populated."""
+    if not peft or name not in peft:
+        return x
+    m = cfg.peft.method
+    if m in ("fedtt", "fedtt_plus"):
+        return adapter_apply(peft[name], adapter_spec(cfg), x, dist=dist)
+    if m == "adapter":
+        return dense_adapter_apply(peft[name], x)
+    return x
+
+
+def peft_param_count(cfg: ModelConfig, n_classes: int | None = None) -> int:
+    """Trainable/communicated parameter count per client (paper §5.5)."""
+    m = cfg.peft.method
+    per_block = 0
+    if m in ("fedtt", "fedtt_plus"):
+        per_block = 2 * adapter_spec(cfg).n_params
+    elif m == "adapter":
+        per_block = 2 * DenseAdapterSpec(cfg.d_model, cfg.peft.bottleneck).n_params
+    elif m in ("lora", "ffa_lora", "rolora"):
+        h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+        per_block = (LoRASpec(cfg.d_model, h * hd, cfg.peft.lora_rank).n_params
+                     + LoRASpec(cfg.d_model, kv * hd, cfg.peft.lora_rank).n_params)
+        if m in ("ffa_lora",):          # only B trained/sent
+            per_block //= 2
+    elif m == "bitfit":
+        per_block = 2 * cfg.d_ff + (cfg.n_heads + 2 * cfg.n_kv_heads) * cfg.hd
+    elif m == "prompt":
+        return cfg.peft.prompt_tokens * cfg.d_model
+    total = cfg.n_layers * per_block
+    if n_classes:
+        from repro.core.adapters import TTClassifierSpec
+        if m in ("fedtt", "fedtt_plus"):
+            # tensorized classifier (Fig. 1c): TT pooler + linear out
+            total += TTClassifierSpec(cfg.d_model, n_classes, cfg.peft.tt_rank).n_params
+        else:
+            # paper Table 1 accounting: baselines count only the linear probe
+            # (the dense pooler is excluded from their "# Param." column --
+            # LoRA r=4 on DeBERTa-base = 0.15M = 12 layers x r(d + H*hd) x 2)
+            total += cfg.d_model * n_classes + n_classes
+    return total

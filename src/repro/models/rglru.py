@@ -1,0 +1,124 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Recurrent block structure:
+    x -> [linear d->w -> causal conv(4) -> RG-LRU]  (recurrent branch)
+      -> [linear d->w -> GeLU]                      (gate branch)
+    y = out_proj(recurrent * gate)
+
+RG-LRU (diagonal linear recurrence with input & recurrence gates):
+    r_t = sigmoid(blockdiag(W_a) x_t);  i_t = sigmoid(blockdiag(W_x) x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)            (c = 8)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Like Mamba, the recurrence is elementwise in the width dim -> shards over the
+`model` axis with zero collectives; train/prefill uses the same chunked
+associative scan.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import HybridConfig, ModelConfig
+
+_C = 8.0
+_N_BLOCKS = 16     # divides the 16-wide model axis -> gate matmuls stay local
+_D_CONV = 4
+
+
+def _width(cfg: ModelConfig) -> int:
+    hy = cfg.hybrid or HybridConfig()
+    return hy.lru_width or cfg.d_model
+
+
+def rglru_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d, w = cfg.d_model, _width(cfg)
+    wb = w // _N_BLOCKS
+    ks = jax.random.split(key, 6)
+    init = lambda k, fan_in, shape: (jax.random.normal(k, shape) / math.sqrt(fan_in)).astype(dtype)
+    # Lambda init so a ~ U(0.9, 0.999)^c at r=1
+    u = jax.random.uniform(ks[4], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u)))  # softplus^-1(-log u)
+    return {
+        "in_x": init(ks[0], d, (d, w)),
+        "in_gate": init(ks[1], d, (d, w)),
+        "conv_w": init(ks[2], _D_CONV, (_D_CONV, w)),
+        "conv_b": jnp.zeros((w,), dtype),
+        "gate_a": init(ks[3], wb, (_N_BLOCKS, wb, wb)),
+        "gate_a_b": jnp.zeros((w,), dtype),
+        "gate_x": init(ks[5], wb, (_N_BLOCKS, wb, wb)),
+        "gate_x_b": jnp.zeros((w,), dtype),
+        "lambda": lam.astype(dtype),
+        "out": init(ks[0], w, (w, d)),
+    }
+
+
+def _block_diag(x: jax.Array, w_blocks: jax.Array, b: jax.Array) -> jax.Array:
+    """x: (..., w) @ block-diagonal weight (n_blocks, wb, wb) + b."""
+    nb, wb, _ = w_blocks.shape
+    xs = x.reshape(x.shape[:-1] + (nb, wb))
+    out = jnp.einsum("...ni,nij->...nj", xs, w_blocks)
+    return out.reshape(x.shape) + b
+
+
+def _gates(p: dict, xb: jax.Array):
+    r = jax.nn.sigmoid(_block_diag(xb, p["gate_a"], p["gate_a_b"]))
+    i = jax.nn.sigmoid(_block_diag(xb, p["gate_x"], p["gate_x_b"]))
+    log_a = -_C * jax.nn.softplus(p["lambda"].astype(jnp.float32)) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12))
+    return a, beta * (i.astype(jnp.float32) * xb.astype(jnp.float32))
+
+
+def _conv(p: dict, x: jax.Array, tail: jax.Array | None = None) -> jax.Array:
+    if tail is None:
+        pad = jnp.zeros((x.shape[0], _D_CONV - 1, x.shape[-1]), x.dtype)
+    else:
+        pad = tail
+    xp = jnp.concatenate([pad, x], axis=1)
+    return sum(xp[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(_D_CONV)) + p["conv_b"]
+
+
+def rglru_mixer(p: dict, cfg: ModelConfig, x: jax.Array, chunk: int = 512) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    b, sl, _ = x.shape
+    xb = _conv(p, x @ p["in_x"])                           # (B, S, w)
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    a, bx = _gates(p, xb)                                  # (B, S, w) f32
+
+    chunk = min(chunk, sl)
+    assert sl % chunk == 0
+    nc = sl // chunk
+    ac = a.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+    bc = bx.reshape(b, nc, chunk, -1).transpose(1, 0, 2, 3)
+
+    def chunk_step(h0, xs):
+        a_c, b_c = xs
+        def combine(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, bl * ar + br
+        cum_a, cum_b = jax.lax.associative_scan(combine, (a_c, b_c), axis=1)
+        h = cum_a * h0[:, None] + cum_b
+        return h[:, -1], h
+
+    h0 = jnp.zeros((b, a.shape[-1]), jnp.float32)
+    _, hs = jax.lax.scan(chunk_step, h0, (ac, bc))
+    hs = hs.transpose(1, 0, 2, 3).reshape(b, sl, -1).astype(x.dtype)
+    return (hs * gate) @ p["out"]
+
+
+def rglru_decode(p: dict, cfg: ModelConfig, x: jax.Array,
+                 cache: dict) -> tuple[jax.Array, dict]:
+    """x: (B, 1, d); cache = {"h": (B, w) f32, "conv": (B, 3, w)}."""
+    xb_raw = x @ p["in_x"]                                 # (B, 1, w)
+    xb = _conv(p, xb_raw, tail=cache["conv"])
+    new_tail = jnp.concatenate([cache["conv"][:, 1:], xb_raw], axis=1)
+    gate = jax.nn.gelu(x @ p["in_gate"])
+    a, bx = _gates(p, xb)
+    h = a[:, 0] * cache["h"] + bx[:, 0]                    # (B, w)
+    y = (h[:, None].astype(x.dtype) * gate) @ p["out"]
+    return y, {"h": h, "conv": new_tail}

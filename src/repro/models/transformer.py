@@ -1,0 +1,507 @@
+"""Unified model stack for all assigned families.
+
+Layers are parameter-stacked (leading L axis) and iterated with
+``jax.lax.scan`` so the HLO stays O(1) in depth (essential for the 94-layer
+dry-runs).  Heterogeneous-depth patterns (VLM cross-attn every k layers,
+hybrid 1-attn:2-recurrent) scan over *super-blocks* with a small unrolled
+inner loop.
+
+API (all functional):
+    model_init(key, cfg, dtype)          -> {"backbone": ..., "peft": ...}
+    model_forward(params, cfg, batch, *) -> (logits, aux)   # train / prefill
+    init_cache(cfg, batch, cache_len)    -> cache pytree
+    model_decode_step(params, cfg, tokens, pos, cache, *) -> (logits, cache)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import HybridConfig, ModelConfig, SSMConfig
+from repro.models import mamba, moe as moe_lib, rglru
+from repro.models.common import attn_apply, attn_decode, attn_init, mlp_apply, mlp_init, rmsnorm
+from repro.models.moe import DistContext
+from repro.models.peft_glue import apply_hook, block_peft_init
+
+
+# ---------------------------------------------------------------------------
+# Per-block init
+# ---------------------------------------------------------------------------
+
+def _attn_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"ln1": jnp.ones((cfg.d_model,), dtype), "attn": attn_init(k1, cfg, dtype),
+         "ln2": jnp.ones((cfg.d_model,), dtype)}
+    if cfg.moe is not None:
+        p["moe"] = moe_lib.moe_init(k2, cfg, dtype)
+    else:
+        p["mlp"] = mlp_init(k2, cfg, dtype)
+    return p
+
+
+def _xattn_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    """Gated cross-attention block (Llama-3.2-Vision style)."""
+    k1, k2 = jax.random.split(key)
+    return {"ln": jnp.ones((cfg.d_model,), dtype),
+            "xattn": attn_init(k1, cfg, dtype),
+            "gate_attn": jnp.zeros((), dtype),
+            "ln_mlp": jnp.ones((cfg.d_model,), dtype),
+            "mlp": mlp_init(k2, cfg, dtype),
+            "gate_mlp": jnp.zeros((), dtype)}
+
+
+def _rec_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": jnp.ones((cfg.d_model,), dtype), "rec": rglru.rglru_init(k1, cfg, dtype),
+            "ln2": jnp.ones((cfg.d_model,), dtype), "mlp": mlp_init(k2, cfg, dtype)}
+
+
+def _ssm_block_init(key, cfg: ModelConfig, dtype) -> dict:
+    return {"ln": jnp.ones((cfg.d_model,), dtype),
+            "mixer": mamba.mamba_init(key, cfg, dtype)}
+
+
+def _stack(key, n: int, fn) -> dict:
+    keys = jax.random.split(key, n)
+    layers = [fn(k) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+# ---------------------------------------------------------------------------
+# Model init
+# ---------------------------------------------------------------------------
+
+def model_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ke, kb, kx, kh, kp = jax.random.split(key, 5)
+    d = cfg.d_model
+    backbone: dict = {
+        "embed": (0.02 * jax.random.normal(ke, (cfg.vocab, d))).astype(dtype),
+        "final_norm": jnp.ones((d,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        backbone["head"] = (0.02 * jax.random.normal(kh, (d, cfg.vocab))).astype(dtype)
+
+    if cfg.family == "ssm":
+        backbone["blocks"] = _stack(kb, cfg.n_layers, lambda k: _ssm_block_init(k, cfg, dtype))
+    elif cfg.family == "hybrid":
+        hy = cfg.hybrid or HybridConfig()
+        n_super, rem = divmod(cfg.n_layers, hy.attn_every)
+        kr, ka, krem = jax.random.split(kb, 3)
+        backbone["rec_blocks"] = _stack(
+            kr, n_super * (hy.attn_every - 1), lambda k: _rec_block_init(k, cfg, dtype))
+        backbone["attn_blocks"] = _stack(ka, n_super, lambda k: _attn_block_init(k, cfg, dtype))
+        if rem:
+            backbone["rem_blocks"] = _stack(krem, rem, lambda k: _rec_block_init(k, cfg, dtype))
+    else:
+        backbone["blocks"] = _stack(kb, cfg.n_layers, lambda k: _attn_block_init(k, cfg, dtype))
+        if cfg.cross_attn_every:
+            n_x = cfg.n_layers // cfg.cross_attn_every
+            backbone["x_blocks"] = _stack(kx, n_x, lambda k: _xattn_block_init(k, cfg, dtype))
+
+    # PEFT params: one hook-set per *primary* block (paper places adapters in
+    # every encoder/decoder block).
+    peft: dict = {}
+    if cfg.peft.method != "none":
+        n_blocks = cfg.n_layers
+        peft["blocks"] = _stack(kp, n_blocks, lambda k: block_peft_init(k, cfg, dtype))
+        if cfg.peft.method == "prompt":
+            from repro.core.peft import PromptSpec, prompt_init
+            peft["prompt"] = prompt_init(kp, PromptSpec(d, cfg.peft.prompt_tokens), dtype)
+    return {"backbone": backbone, "peft": peft}
+
+
+# ---------------------------------------------------------------------------
+# Block apply
+# ---------------------------------------------------------------------------
+
+def _attn_block_apply(bp, peft_b, cfg: ModelConfig, x, positions, *,
+                      causal, window, dist, xattn=None):
+    h = x + attn_apply(bp["attn"], cfg, rmsnorm(x, bp["ln1"], cfg.norm_eps),
+                       positions, causal, window, peft=peft_b, dist=dist)
+    h = apply_hook(peft_b, cfg, "adapter_attn", h, dist=dist)
+    if xattn is not None:   # gated cross-attention sub-block first (VLM)
+        xp, img = xattn
+        xh = attn_apply(xp["xattn"], cfg, rmsnorm(h, xp["ln"], cfg.norm_eps),
+                        positions, causal=False, window=None,
+                        kv_x=img, kv_positions=jnp.arange(img.shape[1]),
+                        use_rope=False, dist=dist)
+        h = h + jnp.tanh(xp["gate_attn"]) * xh
+        mh = mlp_apply(xp["mlp"], cfg, rmsnorm(h, xp["ln_mlp"], cfg.norm_eps))
+        h = h + jnp.tanh(xp["gate_mlp"]) * mh
+    aux = jnp.zeros((), jnp.float32)
+    hn = rmsnorm(h, bp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        m, aux = moe_lib.moe_apply(bp["moe"], cfg, hn, dist)
+    else:
+        m = mlp_apply(bp["mlp"], cfg, hn)
+    h = h + m
+    h = apply_hook(peft_b, cfg, "adapter_mlp", h, dist=dist)
+    return h, aux
+
+
+def _rec_block_apply(bp, peft_b, cfg: ModelConfig, x):
+    h = x + rglru.rglru_mixer(bp["rec"], cfg, rmsnorm(x, bp["ln1"], cfg.norm_eps))
+    h = apply_hook(peft_b, cfg, "adapter_attn", h)
+    h = h + mlp_apply(bp["mlp"], cfg, rmsnorm(h, bp["ln2"], cfg.norm_eps))
+    return apply_hook(peft_b, cfg, "adapter_mlp", h)
+
+
+def _ssm_block_apply(bp, peft_b, cfg: ModelConfig, x):
+    h = x + mamba.mamba_mixer(bp["mixer"], cfg, rmsnorm(x, bp["ln"], cfg.norm_eps))
+    return apply_hook(peft_b, cfg, "adapter_mlp", h)
+
+
+def _take(tree, i):
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _constrain(x, dist: DistContext | None, spec):
+    if dist is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(dist.mesh, spec))
+
+
+def _res_constrain(x, dist: DistContext | None):
+    """Residual-stream sharding at block boundaries: d_model over `model`.
+
+    This is what the remat policy saves, so it cuts checkpointed-activation
+    memory by the model-axis size (Megatron-style activation partitioning).
+    The d dim must divide the axis; otherwise fall back to replicated."""
+    if dist is None or not dist.act_shard:
+        return x
+    import numpy as _np
+    bsz = int(_np.prod([dist.mesh.shape[a] for a in dist.batch_axes]))
+    b_ax = (dist.batch_axes if x.shape[0] % bsz == 0 else None) or None
+    m_ax = "model" if x.shape[-1] % dist.model_size == 0 else None
+    return _constrain(x, dist, P(b_ax, None, m_ax))
+
+
+def model_hidden(params: dict, cfg: ModelConfig, batch: dict, *,
+                 dist: DistContext | None = None, remat: bool = False
+                 ) -> tuple[jax.Array, jax.Array, int]:
+    """Trunk only: returns (hidden (B,S,d) post-final-norm, aux, n_prompt).
+
+    batch: {"tokens": (B,S) int} or {"embeds": (B,S,d)} (audio stub),
+    plus {"img_embeds": (B,n_img,d)} for VLM."""
+    bb, peft = params["backbone"], params.get("peft", {})
+    if "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = bb["embed"][batch["tokens"]]
+    n_prompt = 0
+    if peft and "prompt" in peft:
+        from repro.core.peft import prompt_prepend
+        x = prompt_prepend(peft["prompt"], x)
+        n_prompt = x.shape[1] - batch.get("tokens", batch.get("embeds")).shape[1]
+    b, s = x.shape[:2]
+    baxes = (dist.batch_axes if dist else ("data",)) or None
+    x = _res_constrain(_constrain(x, dist, P(baxes, None, None)), dist)
+    positions = jnp.arange(s)
+    causal = not cfg.encoder_only
+    window = cfg.swa_window
+    peft_blocks = peft.get("blocks")
+
+    def maybe_remat(f):
+        return jax.checkpoint(f) if remat else f
+
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.family == "ssm":
+        @maybe_remat
+        def body(h, xs):
+            bp, pb = xs
+            return _res_constrain(_ssm_block_apply(bp, pb, cfg, h), dist), None
+        x, _ = jax.lax.scan(body, x, (bb["blocks"], peft_blocks))
+    elif cfg.family == "hybrid":
+        hy = cfg.hybrid or HybridConfig()
+        k = hy.attn_every
+        n_super = cfg.n_layers // k
+        rec = jax.tree.map(lambda a: a.reshape((n_super, k - 1) + a.shape[1:]),
+                           bb["rec_blocks"])
+        pf = jax.tree.map(lambda a: a.reshape((n_super, k) + a.shape[1:]),
+                          jax.tree.map(lambda a: a[: n_super * k], peft_blocks)) \
+            if peft_blocks else None
+
+        @maybe_remat
+        def body(h, xs):
+            rec_g, attn_g, pf_g = xs
+            a = jnp.zeros((), jnp.float32)
+            for j in range(k - 1):
+                h = _rec_block_apply(_take(rec_g, j), _take(pf_g, j) if pf_g else None, cfg, h)
+            h, a = _attn_block_apply(
+                attn_g, _take(pf_g, k - 1) if pf_g else None, cfg, h, positions,
+                causal=causal, window=hy.local_window, dist=dist)
+            return _res_constrain(h, dist), a
+        x, auxs = jax.lax.scan(body, x, (rec, bb["attn_blocks"], pf))
+        aux_total += auxs.sum()
+        if "rem_blocks" in bb:
+            rem_pf = jax.tree.map(lambda a: a[n_super * k:], peft_blocks) if peft_blocks else None
+
+            @maybe_remat
+            def rem_body(h, xs):
+                bp, pb = xs
+                return _res_constrain(_rec_block_apply(bp, pb, cfg, h), dist), None
+            x, _ = jax.lax.scan(rem_body, x, (bb["rem_blocks"], rem_pf))
+    elif cfg.cross_attn_every:
+        kx = cfg.cross_attn_every
+        n_super = cfg.n_layers // kx
+        blocks = jax.tree.map(lambda a: a.reshape((n_super, kx) + a.shape[1:]), bb["blocks"])
+        pf = jax.tree.map(lambda a: a.reshape((n_super, kx) + a.shape[1:]), peft_blocks) \
+            if peft_blocks else None
+        img = batch["img_embeds"]
+
+        @maybe_remat
+        def body(h, xs):
+            blk_g, xblk, pf_g = xs
+            a = jnp.zeros((), jnp.float32)
+            for j in range(kx):
+                xa = (xblk, img) if j == kx - 1 else None
+                h, aj = _attn_block_apply(
+                    _take(blk_g, j), _take(pf_g, j) if pf_g else None, cfg, h,
+                    positions, causal=causal, window=window, dist=dist, xattn=xa)
+                a += aj
+            return _res_constrain(h, dist), a
+        x, auxs = jax.lax.scan(body, x, (blocks, bb["x_blocks"], pf))
+        aux_total += auxs.sum()
+    else:
+        @maybe_remat
+        def body(h, xs):
+            bp, pb = xs
+            h, a = _attn_block_apply(bp, pb, cfg, h, positions,
+                                     causal=causal, window=window, dist=dist)
+            return _res_constrain(h, dist), a
+        x, auxs = jax.lax.scan(body, x, (bb["blocks"], peft_blocks))
+        aux_total += auxs.sum()
+
+    x = rmsnorm(x, bb["final_norm"], cfg.norm_eps)
+    return x, aux_total, n_prompt
+
+
+def model_forward(params: dict, cfg: ModelConfig, batch: dict, *,
+                  dist: DistContext | None = None, remat: bool = False,
+                  logits_f32: bool = True) -> tuple[jax.Array, jax.Array]:
+    """LM head on the trunk.  Returns (logits (B,S,V), aux_loss)."""
+    bb = params["backbone"]
+    x, aux_total, n_prompt = model_hidden(params, cfg, batch, dist=dist, remat=remat)
+    head = bb["embed"].T if cfg.tie_embeddings else bb["head"]
+    logits = x @ head
+    if logits_f32:
+        logits = logits.astype(jnp.float32)
+    if n_prompt:
+        logits = logits[:, n_prompt:]
+    baxes = dist.batch_axes if dist else ("data",)
+    logits = _constrain(logits, dist, P(baxes, None, "model"))
+    return logits, aux_total
+
+
+def forward_classify(params: dict, cfg: ModelConfig, batch: dict,
+                     classifier: dict, n_classes: int, *,
+                     dist: DistContext | None = None) -> tuple[jax.Array, jax.Array]:
+    """Sequence classification: [CLS]-style pooling (token 0) + classifier.
+
+    With the fedtt/fedtt_plus methods the classifier is the tensorized
+    classifier (paper Fig. 1c); otherwise a dense head of the same shape.
+    Returns (logits (B, n_classes), aux)."""
+    hidden, aux, n_prompt = model_hidden(params, cfg, batch, dist=dist)
+    pooled = hidden[:, n_prompt]                            # first real token
+    if cfg.peft.method in ("fedtt", "fedtt_plus"):
+        from repro.core.adapters import TTClassifierSpec, tt_classifier_apply
+        spec = TTClassifierSpec(cfg.d_model, n_classes, cfg.peft.tt_rank)
+        return tt_classifier_apply(classifier, spec, pooled), aux
+    h = jnp.tanh(pooled @ classifier["proj_w"] + classifier["proj_b"])
+    return h @ classifier["out_w"] + classifier["out_b"], aux
+
+
+def classifier_init(key: jax.Array, cfg: ModelConfig, n_classes: int,
+                    dtype=jnp.float32) -> dict:
+    if cfg.peft.method in ("fedtt", "fedtt_plus"):
+        from repro.core.adapters import TTClassifierSpec, tt_classifier_init
+        return tt_classifier_init(key, TTClassifierSpec(cfg.d_model, n_classes,
+                                                        cfg.peft.tt_rank), dtype=dtype)
+    k1, k2 = jax.random.split(key)
+    d = cfg.d_model
+    return {"proj_w": (jax.random.normal(k1, (d, d)) / jnp.sqrt(d)).astype(dtype),
+            "proj_b": jnp.zeros((d,), dtype),
+            "out_w": (0.02 * jax.random.normal(k2, (d, n_classes))).astype(dtype),
+            "out_b": jnp.zeros((n_classes,), dtype)}
+
+
+# ---------------------------------------------------------------------------
+# Decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.float32,
+               n_img: int | None = None) -> dict:
+    """Cache pytree for one-token decode.  cache_len should be
+    min(seq_len, swa_window or local_window) for windowed archs."""
+    kv, hd = cfg.n_kv_heads, cfg.hd
+    if cfg.family == "ssm":
+        s = cfg.ssm or SSMConfig()
+        d_in = s.expand * cfg.d_model
+        return {"h": jnp.zeros((cfg.n_layers, batch, d_in, s.d_state), jnp.float32),
+                "conv": jnp.zeros((cfg.n_layers, batch, s.d_conv - 1, d_in), dtype)}
+    if cfg.family == "hybrid":
+        hy = cfg.hybrid or HybridConfig()
+        w = hy.lru_width or cfg.d_model
+        n_super = cfg.n_layers // hy.attn_every
+        n_rec = cfg.n_layers - n_super
+        clen = min(cache_len, hy.local_window)
+        return {
+            "rec": {"h": jnp.zeros((n_rec, batch, w), jnp.float32),
+                    "conv": jnp.zeros((n_rec, batch, 3, w), dtype)},
+            "attn": {"k": jnp.zeros((n_super, batch, clen, kv, hd), dtype),
+                     "v": jnp.zeros((n_super, batch, clen, kv, hd), dtype),
+                     "pos": -jnp.ones((n_super, batch, clen), jnp.int32)},
+        }
+    clen = min(cache_len, cfg.swa_window) if cfg.swa_window else cache_len
+    cache = {"k": jnp.zeros((cfg.n_layers, batch, clen, kv, hd), dtype),
+             "v": jnp.zeros((cfg.n_layers, batch, clen, kv, hd), dtype),
+             "pos": -jnp.ones((cfg.n_layers, batch, clen), jnp.int32)}
+    if cfg.cross_attn_every and n_img:
+        n_x = cfg.n_layers // cfg.cross_attn_every
+        cache["img_k"] = jnp.zeros((n_x, batch, n_img, kv, hd), dtype)
+        cache["img_v"] = jnp.zeros((n_x, batch, n_img, kv, hd), dtype)
+    return cache
+
+
+def _attn_decode_block(bp, peft_b, cfg, x, pos, cache_l, window, img_kv=None,
+                       dist=None):
+    h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
+    y, new_cache = attn_decode(bp["attn"], cfg, h, pos, cache_l, window, peft=peft_b)
+    h = x + y
+    h = apply_hook(peft_b, cfg, "adapter_attn", h)
+    if img_kv is not None:
+        xp, ik, iv = img_kv
+        hq = rmsnorm(h, xp["ln"], cfg.norm_eps)
+        from repro.models.common import _gqa_out, _gqa_scores, _project_qkv
+        q, _, _ = _project_qkv(xp["xattn"], cfg, hq)
+        scores = _gqa_scores(q, ik).astype(jnp.float32)
+        probs = jax.nn.softmax(scores, axis=-1).astype(h.dtype)
+        xa = _gqa_out(probs, iv).reshape(h.shape[0], 1, -1) @ xp["xattn"]["wo"]
+        h = h + jnp.tanh(xp["gate_attn"]) * xa
+        mh = mlp_apply(xp["mlp"], cfg, rmsnorm(h, xp["ln_mlp"], cfg.norm_eps))
+        h = h + jnp.tanh(xp["gate_mlp"]) * mh
+    hn = rmsnorm(h, bp["ln2"], cfg.norm_eps)
+    if cfg.moe is not None:
+        m, _ = moe_lib.moe_apply(bp["moe"], cfg, hn, dist, min_capacity=16)
+    else:
+        m = mlp_apply(bp["mlp"], cfg, hn)
+    h = h + m
+    h = apply_hook(peft_b, cfg, "adapter_mlp", h)
+    return h, new_cache
+
+
+def model_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                      pos: jax.Array, cache: dict, *,
+                      dist: DistContext | None = None) -> tuple[jax.Array, dict]:
+    """tokens: (B,) int32 new token; pos: (B,) absolute positions.
+
+    Returns (logits (B, vocab), new cache)."""
+    bb, peft = params["backbone"], params.get("peft", {})
+    x = bb["embed"][tokens][:, None]                       # (B, 1, d)
+    baxes = (dist.batch_axes if dist else ("data",)) or None
+    x = _constrain(x, dist, P(baxes, None, None))
+    peft_blocks = peft.get("blocks")
+
+    if cfg.family == "ssm":
+        def body(h, xs):
+            bp, pb, c = xs
+            hn = rmsnorm(h, bp["ln"], cfg.norm_eps)
+            y, nc = mamba.mamba_decode(bp["mixer"], cfg, hn, c)
+            h = h + y
+            h = apply_hook(pb, cfg, "adapter_mlp", h)
+            return h, nc
+        x, new_cache = jax.lax.scan(body, x, (bb["blocks"], peft_blocks, cache))
+        cache = new_cache
+    elif cfg.family == "hybrid":
+        hy = cfg.hybrid or HybridConfig()
+        k = hy.attn_every
+        n_super = cfg.n_layers // k
+        n_rec_main = n_super * (k - 1)
+        rec = jax.tree.map(lambda a: a.reshape((n_super, k - 1) + a.shape[1:]), bb["rec_blocks"])
+        rec_cache_main = jax.tree.map(lambda a: a[:n_rec_main].reshape((n_super, k - 1) + a.shape[1:]),
+                                      cache["rec"])
+        pf = jax.tree.map(lambda a: a[: n_super * k].reshape((n_super, k) + a.shape[1:]),
+                          peft_blocks) if peft_blocks else None
+
+        def body(h, xs):
+            rec_g, attn_g, rc_g, ac, pf_g = xs
+            ncs = []
+            for j in range(k - 1):
+                bp = _take(rec_g, j)
+                pb = _take(pf_g, j) if pf_g else None
+                hn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
+                y, nc = rglru.rglru_decode(bp["rec"], cfg, hn, _take(rc_g, j))
+                h = h + y
+                h = apply_hook(pb, cfg, "adapter_attn", h)
+                h = h + mlp_apply(bp["mlp"], cfg, rmsnorm(h, bp["ln2"], cfg.norm_eps))
+                h = apply_hook(pb, cfg, "adapter_mlp", h)
+                ncs.append(nc)
+            h, nac = _attn_decode_block(attn_g, _take(pf_g, k - 1) if pf_g else None,
+                                        cfg, h, pos, ac, hy.local_window, dist=dist)
+            rec_new = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+            return h, (rec_new, nac)
+        x, (rec_new, attn_new) = jax.lax.scan(
+            body, x, (rec, bb["attn_blocks"], rec_cache_main, cache["attn"], pf))
+        rec_flat = jax.tree.map(lambda a: a.reshape((n_rec_main,) + a.shape[2:]), rec_new)
+        if "rem_blocks" in bb:
+            rem_pf = jax.tree.map(lambda a: a[n_super * k:], peft_blocks) if peft_blocks else None
+            rem_cache = jax.tree.map(lambda a: a[n_rec_main:], cache["rec"])
+
+            def rem_body(h, xs):
+                bp, pb, c = xs
+                hn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
+                y, nc = rglru.rglru_decode(bp["rec"], cfg, hn, c)
+                h = h + y
+                h = apply_hook(pb, cfg, "adapter_attn", h)
+                h = h + mlp_apply(bp["mlp"], cfg, rmsnorm(h, bp["ln2"], cfg.norm_eps))
+                h = apply_hook(pb, cfg, "adapter_mlp", h)
+                return h, nc
+            x, rem_new = jax.lax.scan(rem_body, x, (bb["rem_blocks"], rem_pf, rem_cache))
+            rec_flat = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), rec_flat, rem_new)
+        cache = {"rec": rec_flat, "attn": attn_new}
+    else:
+        window = cfg.swa_window
+        if cfg.cross_attn_every and "img_k" in cache:
+            kx = cfg.cross_attn_every
+            n_super = cfg.n_layers // kx
+            blocks = jax.tree.map(lambda a: a.reshape((n_super, kx) + a.shape[1:]), bb["blocks"])
+            pf = jax.tree.map(lambda a: a.reshape((n_super, kx) + a.shape[1:]), peft_blocks) \
+                if peft_blocks else None
+            kv_cache = {k_: cache[k_] for k_ in ("k", "v", "pos")}
+            kvc = jax.tree.map(lambda a: a.reshape((n_super, kx) + a.shape[1:]), kv_cache)
+
+            def body(h, xs):
+                blk_g, xblk, c_g, ik, iv, pf_g = xs
+                ncs = []
+                for j in range(kx):
+                    img_kv = (xblk, ik, iv) if j == kx - 1 else None
+                    h, nc = _attn_decode_block(
+                        _take(blk_g, j), _take(pf_g, j) if pf_g else None, cfg, h,
+                        pos, _take(c_g, j), window, img_kv=img_kv, dist=dist)
+                    ncs.append(nc)
+                return h, jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
+            x, new_kv = jax.lax.scan(
+                body, x, (blocks, bb["x_blocks"], kvc, cache["img_k"], cache["img_v"], pf))
+            new_kv = jax.tree.map(lambda a: a.reshape((cfg.n_layers,) + a.shape[2:]), new_kv)
+            cache = {**new_kv, "img_k": cache["img_k"], "img_v": cache["img_v"]}
+        else:
+            def body(h, xs):
+                bp, pb, c = xs
+                h, nc = _attn_decode_block(bp, pb, cfg, h, pos, c, window, dist=dist)
+                return h, nc
+            x, cache = jax.lax.scan(body, x, (bb["blocks"], peft_blocks, cache))
+
+    x = rmsnorm(x, bb["final_norm"], cfg.norm_eps)
+    head = bb["embed"].T if cfg.tie_embeddings else bb["head"]
+    logits = (x @ head)[:, 0].astype(jnp.float32)          # (B, vocab)
+    return logits, cache

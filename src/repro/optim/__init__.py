@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (adamw, sgd, apply_updates, OptState,
+                                    cosine_schedule, linear_schedule,
+                                    masked_update)
+
+__all__ = ["adamw", "sgd", "apply_updates", "OptState", "cosine_schedule",
+           "linear_schedule", "masked_update"]

@@ -1,0 +1,112 @@
+"""Minimal functional optimizers (optax is not available offline).
+
+API mirrors optax:  opt = adamw(lr); state = opt.init(params);
+updates, state = opt.update(grads, state, params); params = apply_updates(...).
+
+``masked_update`` freezes pytree leaves via a boolean mask pytree -- this is
+how FedTT+ freezes TT factors and how PEFT keeps the backbone fixed without
+paying optimizer-state memory for frozen leaves (moments are only allocated
+for trainable leaves).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: dict | None
+    nu: dict | None
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    update: Callable
+
+
+def _tree_zeros_like(params):
+    return jax.tree.map(jnp.zeros_like, params)
+
+
+def adamw(lr: float | Callable[[jax.Array], jax.Array], b1: float = 0.9,
+          b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.01) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), _tree_zeros_like(params),
+                        _tree_zeros_like(params))
+
+    def update(grads, state: OptState, params):
+        step = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * g * g, state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        lr_t = lr_fn(step)
+
+        def u(m, v, p):
+            mhat = m / bc1
+            vhat = v / bc2
+            return -lr_t * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p)
+        updates = jax.tree.map(u, mu, nu, params)
+        return updates, OptState(step, mu, nu)
+
+    return Optimizer(init, update)
+
+
+def sgd(lr: float | Callable, momentum: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        mu = _tree_zeros_like(params) if momentum else None
+        return OptState(jnp.zeros((), jnp.int32), mu, None)
+
+    def update(grads, state: OptState, params):
+        del params
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        if momentum:
+            mu = jax.tree.map(lambda m, g: momentum * m + g, state.mu, grads)
+            updates = jax.tree.map(lambda m: -lr_t * m, mu)
+            return updates, OptState(step, mu, None)
+        return jax.tree.map(lambda g: -lr_t * g, grads), OptState(step, None, None)
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def masked_update(updates, mask):
+    """Zero updates where mask is False.  mask: pytree of bools (leaf-level)
+    or arrays broadcastable to the leaf."""
+    return jax.tree.map(
+        lambda u, m: u * jnp.asarray(m, u.dtype) if not isinstance(m, bool)
+        else (u if m else jnp.zeros_like(u)), updates, mask)
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def linear_schedule(base_lr: float, warmup: int, total: int) -> Callable:
+    def f(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return jnp.where(step < warmup, warm, base_lr * (1 - prog))
+    return f

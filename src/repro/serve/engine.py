@@ -1,0 +1,162 @@
+"""Batched serving engine with continuous batching over fixed decode slots.
+
+Every engine step runs ONE jitted `model_decode_step` for all B slots.  Each
+slot is independently in a *prefill* phase (teacher-forcing its prompt, one
+token per step -- piggyback prefill) or a *decode* phase (sampling).  When a
+slot finishes its request, the host swaps in the next queued request and
+resets that slot's cache lanes; the jitted step never recompiles.
+
+Sampling: greedy, temperature, or top-k (per-request).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models.transformer import init_cache, model_decode_step
+
+
+@dataclasses.dataclass
+class Request:
+    prompt: list[int]
+    max_new_tokens: int = 32
+    temperature: float = 0.0          # 0 => greedy
+    top_k: int = 0                    # 0 => full softmax
+    uid: int = -1
+
+    def __post_init__(self):
+        assert len(self.prompt) >= 1
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Request | None = None
+    prompt_pos: int = 0
+    generated: list = dataclasses.field(default_factory=list)
+
+    @property
+    def prefilling(self) -> bool:
+        return self.req is not None and self.prompt_pos < len(self.req.prompt)
+
+    @property
+    def done(self) -> bool:
+        return (self.req is not None and not self.prefilling
+                and len(self.generated) >= self.req.max_new_tokens)
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params: dict, batch_slots: int = 4,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.max_len = max_len
+        self.key = jax.random.key(seed)
+        self.cache = init_cache(cfg, batch_slots, max_len)
+        self.slots = [_Slot() for _ in range(batch_slots)]
+        self.queue: list[Request] = []
+        self.finished: list[tuple[Request, list[int]]] = []
+        self._next_uid = 0
+
+        @jax.jit
+        def _step(params, tokens, pos, cache, key, temps, topks, active):
+            logits, cache = model_decode_step(params, cfg, tokens, pos, cache)
+            # per-slot sampling
+            keys = jax.random.split(key, tokens.shape[0] + 1)
+            step_keys, new_key = keys[:-1], keys[-1]
+
+            def sample(logit, k, temp, topk):
+                greedy = jnp.argmax(logit).astype(jnp.int32)
+                lt = logit / jnp.maximum(temp, 1e-6)
+                kth = jnp.sort(lt)[-jnp.maximum(topk, 1)]
+                lt = jnp.where((topk > 0) & (lt < kth), -jnp.inf, lt)
+                samp = jax.random.categorical(k, lt).astype(jnp.int32)
+                return jnp.where(temp <= 0.0, greedy, samp)
+
+            sampled = jax.vmap(sample)(logits, step_keys, temps, topks)
+            sampled = jnp.where(active, sampled, 0)
+            return sampled, cache, new_key
+
+        self._step = _step
+
+    def submit(self, req: Request) -> int:
+        req.uid = self._next_uid
+        self._next_uid += 1
+        self.queue.append(req)
+        return req.uid
+
+    def _zero_slot_cache(self, i: int):
+        """Reset slot i's lanes (fresh request)."""
+        def reset(x):
+            if x.ndim >= 2 and x.shape[1] == self.b:   # (L, B, ...)
+                fill = -jnp.ones_like(x[:, i]) if x.dtype == jnp.int32 \
+                    else jnp.zeros_like(x[:, i])
+                return x.at[:, i].set(fill)
+            return x
+        self.cache = jax.tree.map(reset, self.cache)
+
+    def _fill_slots(self):
+        for i, s in enumerate(self.slots):
+            if s.req is None and self.queue:
+                s.req = self.queue.pop(0)
+                s.prompt_pos = 0
+                s.generated = []
+                self._zero_slot_cache(i)
+
+    def step(self) -> int:
+        """One engine step for all slots.  Returns #completed requests."""
+        self._fill_slots()
+        tokens, pos, temps, topks, active = [], [], [], [], []
+        for s in self.slots:
+            if s.req is None:
+                tokens.append(0), pos.append(0), temps.append(0.0)
+                topks.append(0), active.append(False)
+                continue
+            p = s.prompt_pos + len(s.generated)
+            if s.prefilling:
+                tokens.append(s.req.prompt[s.prompt_pos])
+            else:
+                tokens.append(s.generated[-1] if s.generated
+                              else s.req.prompt[-1])
+            pos.append(p)
+            temps.append(s.req.temperature)
+            topks.append(s.req.top_k)
+            active.append(True)
+
+        sampled, self.cache, self.key = self._step(
+            self.params, jnp.asarray(tokens, jnp.int32),
+            jnp.asarray(pos, jnp.int32), self.cache, self.key,
+            jnp.asarray(temps, jnp.float32), jnp.asarray(topks, jnp.int32),
+            jnp.asarray(active))
+        sampled = np.asarray(sampled)
+
+        completed = 0
+        for i, s in enumerate(self.slots):
+            if s.req is None:
+                continue
+            if s.prefilling:
+                s.prompt_pos += 1
+                # the step that consumed the LAST prompt token emits the
+                # first generated token
+                if not s.prefilling:
+                    s.generated.append(int(sampled[i]))
+            else:
+                s.generated.append(int(sampled[i]))
+            if s.done:
+                self.finished.append((s.req, list(s.generated)))
+                self.slots[i] = _Slot()
+                completed += 1
+        return completed
+
+    def run_until_done(self, max_steps: int = 10_000):
+        steps = 0
+        while (self.queue or any(s.req for s in self.slots)) and steps < max_steps:
+            self.step()
+            steps += 1
+        return steps

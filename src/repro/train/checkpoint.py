@@ -1,0 +1,55 @@
+"""npz-based pytree checkpointing (orbax unavailable offline).
+
+Flattens a pytree to path-keyed arrays; restores into the same treedef.
+Good enough for adapters + optimizer state (the only mutable state under
+PEFT); backbone weights are reproducible from the init seed.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save(path: str, tree, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = _flatten(tree)
+    np.savez(path, **flat)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f)
+
+
+def restore(path: str, like):
+    """Restore into the structure of `like` (arrays replaced by saved ones)."""
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat_like = _flatten(like)
+    if set(data.files) != set(flat_like):
+        missing = set(flat_like) - set(data.files)
+        extra = set(data.files) - set(flat_like)
+        raise ValueError(f"checkpoint mismatch: missing={missing} extra={extra}")
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_k, leaf in leaves_like:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path_k)
+        out.append(jnp.asarray(data[key], dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def load_metadata(path: str) -> dict:
+    with open(path + ".meta.json") as f:
+        return json.load(f)

@@ -1,0 +1,163 @@
+"""Train / prefill / serve steps.
+
+Only PEFT params receive gradients: the backbone is a frozen input to the
+loss (so XLA allocates no grads/optimizer state for it -- the point of PEFT).
+With the batch sharded over (pod, data) and adapters replicated, XLA inserts
+exactly one all-reduce per adapter tensor for the gradient -- that all-reduce
+payload IS the FedTT up-link message (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.moe import DistContext
+from repro.models.transformer import model_decode_step, model_forward
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """logits (..., V) any float dtype; labels (...) int.  Computed in f32."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)
+
+
+_CE_CHUNK = 512
+
+
+def fused_head_ce(hidden: jax.Array, head: jax.Array, labels: jax.Array,
+                  mask: jax.Array | None = None) -> jax.Array:
+    """Sequence-chunked (head matmul + cross-entropy): the (B, S, V) logits
+    tensor never materializes -- per chunk only (B, chunk, V), rematerialized
+    in backward.  hidden: (B, S, d); head: (d, V); labels/mask: (B, S)."""
+    b, s, d = hidden.shape
+    if mask is None:
+        mask = jnp.ones((b, s), jnp.float32)
+    if s <= _CE_CHUNK or s % _CE_CHUNK != 0:
+        return cross_entropy(hidden @ head, labels, mask)
+    ns = s // _CE_CHUNK
+    hc = hidden.reshape(b, ns, _CE_CHUNK, d).transpose(1, 0, 2, 3)
+    lc = labels.reshape(b, ns, _CE_CHUNK).transpose(1, 0, 2)
+    mc = mask.reshape(b, ns, _CE_CHUNK).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def step(carry, xs):
+        tot, cnt = carry
+        h, y, m = xs
+        logits = (h @ head).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, y[..., None], axis=-1)[..., 0]
+        return (tot + jnp.sum((lse - gold) * m), cnt + jnp.sum(m)), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        step, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hc, lc, mc))
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def lm_loss(params: dict, cfg: ModelConfig, batch: dict, *,
+            dist: DistContext | None = None, remat: bool = False,
+            aux_weight: float = 0.01) -> tuple[jax.Array, dict]:
+    """Next-token (decoder) or frame-label (encoder) cross-entropy, with the
+    LM head fused into sequence-chunked CE (no (B,S,V) logits tensor)."""
+    from repro.models.transformer import model_hidden
+    bb = params["backbone"]
+    hidden, aux, n_prompt = model_hidden(params, cfg, batch, dist=dist, remat=remat)
+    if n_prompt:
+        hidden = hidden[:, n_prompt:]
+    head = bb["embed"].T if cfg.tie_embeddings else bb["head"]
+    if cfg.encoder_only:
+        loss = fused_head_ce(hidden, head, batch["labels"])
+    else:
+        tokens = batch["tokens"]
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+        mask = jnp.ones(tokens.shape, jnp.float32).at[:, -1].set(0.0)
+        loss = fused_head_ce(hidden, head, labels, mask)
+    total = loss + aux_weight * aux
+    return total, {"loss": loss, "aux": aux}
+
+
+def partition_by_mask(tree, mask):
+    """Split a pytree into (trainable, frozen) trees with placeholder zeros
+    at the other side's positions (leaf-level bool mask)."""
+    train = jax.tree.map(lambda p, m: p if m else None, tree, mask,
+                         is_leaf=lambda x: x is None)
+    frozen = jax.tree.map(lambda p, m: None if m else p, tree, mask,
+                          is_leaf=lambda x: x is None)
+    return train, frozen
+
+
+def combine_partitions(train, frozen):
+    return jax.tree.map(lambda a, b: a if a is not None else b, train, frozen,
+                        is_leaf=lambda x: x is None)
+
+
+def train_step(params: dict, opt_state, batch: dict, *, cfg: ModelConfig,
+               optimizer, dist: DistContext | None = None,
+               remat: bool = False, freeze_mask=None):
+    """One SGD/AdamW step on the PEFT params only.
+
+    params = {"backbone": frozen, "peft": trainable}.  freeze_mask (optional,
+    bool pytree over peft) implements FedTT+ (Alg. 2): frozen TT factors are
+    *structurally* excluded from the differentiated argument, so no gradient
+    -- and no gradient all-reduce -- exists for them.  That is what makes the
+    paper's up-link saving a real collective-bytes saving (DESIGN.md §8).
+    Returns (new_params, new_opt_state, metrics)."""
+    backbone, peft = params["backbone"], params["peft"]
+
+    if freeze_mask is None:
+        def loss_fn(peft_p):
+            return lm_loss({"backbone": backbone, "peft": peft_p}, cfg, batch,
+                           dist=dist, remat=remat)
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(peft)
+        updates, opt_state = optimizer.update(grads, opt_state, peft)
+        from repro.optim import apply_updates
+        peft = apply_updates(peft, updates)
+        metrics = dict(metrics, total=loss)
+        return {"backbone": backbone, "peft": peft}, opt_state, metrics
+
+    train_p, frozen_p = partition_by_mask(peft, freeze_mask)
+
+    def loss_fn(train_part):
+        full = combine_partitions(train_part, frozen_p)
+        return lm_loss({"backbone": backbone, "peft": full}, cfg, batch,
+                       dist=dist, remat=remat)
+
+    (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(train_p)
+    updates, opt_state = optimizer.update(grads, opt_state, train_p)
+    from repro.optim import apply_updates
+    train_p = jax.tree.map(
+        lambda p, u: (p + u).astype(p.dtype) if p is not None else None,
+        train_p, updates, is_leaf=lambda x: x is None)
+    peft = combine_partitions(train_p, frozen_p)
+    metrics = dict(metrics, total=loss)
+    return {"backbone": backbone, "peft": peft}, opt_state, metrics
+
+
+def prefill_step(params: dict, cfg: ModelConfig, batch: dict, *,
+                 dist: DistContext | None = None) -> jax.Array:
+    """Inference prefill: full-sequence trunk, LM head applied to the LAST
+    position only (what a serving system samples from) -- the (B, S, V)
+    logits tensor never exists."""
+    from repro.models.transformer import model_hidden
+    bb = params["backbone"]
+    hidden, _, _ = model_hidden(params, cfg, batch, dist=dist)
+    head = bb["embed"].T if cfg.tie_embeddings else bb["head"]
+    return (hidden[:, -1] @ head).astype(jnp.float32)
+
+
+def serve_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
+               pos: jax.Array, cache: dict, *,
+               dist: DistContext | None = None):
+    """One decode step: (B,) tokens + cache -> (logits (B,V), new cache)."""
+    return model_decode_step(params, cfg, tokens, pos, cache, dist=dist)

@@ -1,0 +1,73 @@
+"""FedTT+ core claim (paper Eq. 2 / Alg. 2): FedAvg over tensor factors is
+NOT FedAvg over their products -- unless all but one factor are frozen and
+identical across clients, in which case equality is exact."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tt import TTSpec, tt_init, tt_reconstruct
+from repro.fed.rounds import fedtt_plus_factor_mask
+
+SPEC = TTSpec(16, 16, (4, 4, 4, 4), 2, 3)
+
+
+def _clients(n, key, zero_last=False):
+    return [tt_init(jax.random.fold_in(key, i), SPEC, zero_last=zero_last)
+            for i in range(n)]
+
+
+def _avg(fs_list):
+    return [sum(f[j] for f in fs_list) / len(fs_list) for j in range(SPEC.order)]
+
+
+def test_eq2_inequality_holds_generically():
+    """Average-of-products != product-of-averages for generic factors."""
+    clients = _clients(4, jax.random.key(0))
+    prod_of_avg = tt_reconstruct(_avg(clients), SPEC)
+    avg_of_prod = sum(tt_reconstruct(c, SPEC) for c in clients) / 4
+    diff = float(jnp.max(jnp.abs(prod_of_avg - avg_of_prod)))
+    assert diff > 1e-3, "Eq. 2 should be an inequality for generic factors"
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), n=st.integers(2, 5),
+       trained=st.integers(0, 3))
+def test_fedtt_plus_interference_free(seed, n, trained):
+    """When every factor except index `trained` is identical across clients
+    (frozen), product-of-averages == average-of-products exactly (the FedTT+
+    fix, Alg. 2)."""
+    base = tt_init(jax.random.key(seed), SPEC, zero_last=False)
+    clients = []
+    for i in range(n):
+        c = [jnp.array(f) for f in base]
+        c[trained] = base[trained] + 0.1 * jax.random.normal(
+            jax.random.fold_in(jax.random.key(seed + 1), i), base[trained].shape)
+        clients.append(c)
+    prod_of_avg = tt_reconstruct(_avg(clients), SPEC)
+    avg_of_prod = sum(tt_reconstruct(c, SPEC) for c in clients) / n
+    np.testing.assert_allclose(np.asarray(prod_of_avg), np.asarray(avg_of_prod),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_factor_mask_round_robin():
+    """Alg. 2 line 3: G_1 and G_J always train; middle index r cycles over
+    {2..J-1} with r-1 = t mod (J-2)."""
+    j = 6
+    seen_middles = set()
+    for t in range(8):
+        mask = fedtt_plus_factor_mask(j, t)
+        assert mask[0] and mask[-1]
+        mid = [i for i in range(1, j - 1) if mask[i]]
+        assert len(mid) == 1
+        r = mid[0] + 1                      # 1-indexed
+        assert 2 <= r <= j - 1
+        seen_middles.add(r)
+        assert sum(mask) == 3
+    assert seen_middles == set(range(2, j))   # full coverage over J-2 rounds
+
+
+def test_factor_mask_short_chains():
+    assert fedtt_plus_factor_mask(2, 0) == [True, True]
+    assert fedtt_plus_factor_mask(3, 5) == [True, True, True]

@@ -1,0 +1,89 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracle
+(ref.py), forward and backward, interpret=True on CPU."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.tt import make_tt_spec, tt_init
+from repro.kernels import ref
+from repro.kernels.ops import tt_adapter_fused, tt_linear
+
+SHAPES = [(768, 64), (64, 768), (2560, 64), (64, 2560), (256, 64), (128, 128)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+@pytest.mark.parametrize("p,q", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+@pytest.mark.parametrize("rank", [2, 5])
+def test_tt_linear_vs_ref(p, q, dtype, rank):
+    spec = make_tt_spec(p, q, rank)
+    fs = tuple(tt_init(jax.random.key(0), spec, dtype=dtype, zero_last=False))
+    x = jax.random.normal(jax.random.key(1), (2, 5, p)).astype(dtype)
+    y = tt_linear(x, fs, spec)
+    yr = ref.tt_linear_ref(fs, spec, x)
+    assert y.shape == yr.shape == (2, 5, q)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("batch", [1, 3, 255, 256, 257])
+def test_tt_linear_padding(batch):
+    """Batch sizes around the kernel block boundary."""
+    spec = make_tt_spec(128, 64, 4)
+    fs = tuple(tt_init(jax.random.key(0), spec, zero_last=False))
+    x = jax.random.normal(jax.random.key(1), (batch, 128))
+    y = tt_linear(x, fs, spec)
+    yr = ref.tt_linear_ref(fs, spec, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-5, atol=1e-6)
+
+
+def test_tt_linear_grads_match_ref():
+    spec = make_tt_spec(256, 64, 5)
+    fs = tuple(tt_init(jax.random.key(0), spec, zero_last=False))
+    x = jax.random.normal(jax.random.key(1), (7, 256))
+
+    def loss_k(x, fs):
+        return jnp.sum(tt_linear(x, fs, spec) ** 2)
+
+    def loss_r(x, fs):
+        return jnp.sum(ref.tt_linear_ref(fs, spec, x) ** 2)
+
+    gk = jax.grad(loss_k, argnums=(0, 1))(x, fs)
+    gr = jax.grad(loss_r, argnums=(0, 1))(x, fs)
+    np.testing.assert_allclose(np.asarray(gk[0]), np.asarray(gr[0]), rtol=1e-4, atol=1e-5)
+    for a, b in zip(gk[1], gr[1]):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("d,bneck", [(256, 64), (768, 64), (320, 32)])
+def test_tt_adapter_fused_vs_ref(d, bneck):
+    sd, su = make_tt_spec(d, bneck, 5), make_tt_spec(bneck, d, 5)
+    down = tuple(tt_init(jax.random.key(2), sd, zero_last=False))
+    up = tuple(tt_init(jax.random.key(3), su, zero_last=False))
+    x = jax.random.normal(jax.random.key(4), (3, 4, d))
+    y = tt_adapter_fused(down, up, sd, su, x)
+    yr = ref.tt_adapter_ref(down, up, sd, su, x)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=1e-4, atol=1e-5)
+
+
+def test_tt_adapter_fused_grads():
+    sd, su = make_tt_spec(128, 32, 4), make_tt_spec(32, 128, 4)
+    down = tuple(tt_init(jax.random.key(2), sd, zero_last=False))
+    up = tuple(tt_init(jax.random.key(3), su, zero_last=False))
+    x = jax.random.normal(jax.random.key(4), (5, 128))
+    gk = jax.grad(lambda dd: jnp.sum(tt_adapter_fused(dd, up, sd, su, x) ** 2))(down)
+    gr = jax.grad(lambda dd: jnp.sum(ref.tt_adapter_ref(dd, up, sd, su, x) ** 2))(down)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+def test_kernel_under_jit_and_vmap():
+    spec = make_tt_spec(128, 64, 4)
+    fs = tuple(tt_init(jax.random.key(0), spec, zero_last=False))
+    x = jax.random.normal(jax.random.key(1), (4, 128))
+    y1 = jax.jit(lambda x: tt_linear(x, fs, spec))(x)
+    y2 = ref.tt_linear_ref(fs, spec, x)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-5, atol=1e-6)

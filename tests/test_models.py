@@ -1,0 +1,155 @@
+"""Per-arch smoke tests (assignment requirement): every assigned architecture
+instantiates its REDUCED config, runs one forward + one train step on CPU,
+asserts output shapes and finiteness; decoders additionally verify
+decode-with-cache == full forward on the same prefix (strong cache test)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import ARCH_IDS, PEFTConfig, get_config
+from repro.models.transformer import (init_cache, model_decode_step,
+                                      model_forward, model_init)
+from repro.optim import adamw
+from repro.train.step import train_step
+
+B, S = 2, 32
+
+
+def _batch(cfg, key=1):
+    batch = {}
+    if cfg.family == "audio":
+        batch["embeds"] = jax.random.normal(jax.random.key(key), (B, S, cfg.d_model))
+        batch["labels"] = jax.random.randint(jax.random.key(key + 1), (B, S), 0, cfg.vocab)
+    else:
+        batch["tokens"] = jax.random.randint(jax.random.key(key), (B, S), 0, cfg.vocab)
+    if cfg.family == "vlm":
+        batch["img_embeds"] = jax.random.normal(
+            jax.random.key(key + 2), (B, cfg.n_image_tokens, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_shapes_and_finite(arch):
+    cfg = get_config(arch, smoke=True)
+    assert cfg.n_layers <= 2 and cfg.d_model <= 512
+    if cfg.moe:
+        assert cfg.moe.n_experts <= 4
+    params = model_init(jax.random.key(0), cfg)
+    logits, aux = jax.jit(lambda p, b: model_forward(p, cfg, b))(params, _batch(cfg))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+    opt = adamw(1e-3)
+    opt_state = opt.init(params["peft"])
+    batch = _batch(cfg)
+
+    before = jax.tree.leaves(params["peft"])[0]
+    new_params, opt_state, metrics = jax.jit(
+        lambda p, o, b: train_step(p, o, b, cfg=cfg, optimizer=opt))(
+            params, opt_state, batch)
+    assert bool(jnp.isfinite(metrics["loss"]))
+    # some peft leaf must have moved
+    moved = any(
+        float(jnp.max(jnp.abs(a - b))) > 0
+        for a, b in zip(jax.tree.leaves(params["peft"]),
+                        jax.tree.leaves(new_params["peft"])))
+    assert moved, "train step did not update any PEFT parameter"
+
+
+@pytest.mark.parametrize("arch", [a for a in ARCH_IDS if a != "hubert_xlarge"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode with cache reproduces the full-sequence forward
+    logits (validates KV ring buffers, SSM/RG-LRU recurrent states, image-KV
+    cross-attn caches)."""
+    cfg = get_config(arch, smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+    batch = _batch(cfg)
+    tokens = batch["tokens"]
+    full_logits, _ = model_forward(params, cfg, batch)
+
+    n_img = cfg.n_image_tokens if cfg.family == "vlm" else None
+    cache = init_cache(cfg, B, S, n_img=n_img)
+    if cfg.family == "vlm":
+        # precompute image KV per cross block from the img embeddings
+        from repro.models.common import _project_qkv
+        from repro.models.common import apply_rope  # noqa: F401
+        img = batch["img_embeds"]
+        iks, ivs = [], []
+        n_x = cfg.n_layers // cfg.cross_attn_every
+        for i in range(n_x):
+            xp = jax.tree.map(lambda a: a[i], params["backbone"]["x_blocks"])
+            _, ik, iv = _project_qkv(xp["xattn"], cfg, img)
+            iks.append(ik)
+            ivs.append(iv)
+        cache["img_k"] = jnp.stack(iks)
+        cache["img_v"] = jnp.stack(ivs)
+
+    step = jax.jit(lambda p, t, pos, c: model_decode_step(p, cfg, t, pos, c))
+    errs = []
+    for t in range(S):
+        pos = jnp.full((B,), t, jnp.int32)
+        logits_t, cache = step(params, tokens[:, t], pos, cache)
+        errs.append(float(jnp.max(jnp.abs(logits_t - full_logits[:, t]))))
+    scale = float(jnp.max(jnp.abs(full_logits))) + 1e-6
+    assert max(errs) / scale < 5e-3, f"decode mismatch: {max(errs)} vs scale {scale}"
+
+
+def test_swa_masks_out_far_tokens():
+    """Sliding-window attention: logits at position t must not depend on
+    tokens more than `window` back."""
+    cfg = get_config("mixtral_8x22b", smoke=True)
+    cfg = dataclasses.replace(cfg, swa_window=8, peft=PEFTConfig(method="none"))
+    params = model_init(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (1, S), 0, cfg.vocab)
+    l1, _ = model_forward(params, cfg, {"tokens": toks})
+    toks2 = toks.at[0, 0].set((toks[0, 0] + 7) % cfg.vocab)   # mutate a far token
+    l2, _ = model_forward(params, cfg, {"tokens": toks2})
+    # last position is > window away from position 0
+    np.testing.assert_allclose(np.asarray(l1[0, -1]), np.asarray(l2[0, -1]),
+                               rtol=1e-4, atol=1e-4)
+    assert float(jnp.max(jnp.abs(l1[0, 1] - l2[0, 1]))) > 1e-6
+
+
+def test_encoder_bidirectional():
+    """hubert (encoder-only) must attend bidirectionally: early frame logits
+    change when a late frame changes."""
+    cfg = get_config("hubert_xlarge", smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+    e = jax.random.normal(jax.random.key(1), (1, S, cfg.d_model))
+    l1, _ = model_forward(params, cfg, {"embeds": e})
+    e2 = e.at[0, -1].add(1.0)
+    l2, _ = model_forward(params, cfg, {"embeds": e2})
+    assert float(jnp.max(jnp.abs(l1[0, 0] - l2[0, 0]))) > 1e-7
+
+
+def test_chunked_attention_matches_full():
+    from repro.models.common import chunked_attention, full_attention
+    b, s, h, hd = 2, 64, 4, 16
+    q = jax.random.normal(jax.random.key(0), (b, s, h, hd))
+    k = jax.random.normal(jax.random.key(1), (b, s, h, hd))
+    v = jax.random.normal(jax.random.key(2), (b, s, h, hd))
+    pos = jnp.arange(s)
+    for window in [None, 24]:
+        yc = chunked_attention(q, k, v, pos, pos, True, window, kv_chunk=16)
+        yf = full_attention(q, k, v, pos, pos, True, window)
+        np.testing.assert_allclose(np.asarray(yc), np.asarray(yf), rtol=1e-4, atol=1e-5)
+
+
+def test_param_count_matches_assignment_scale():
+    """Full configs land near their nameplate sizes (within 25%)."""
+    expected = {"qwen3_8b": 8e9, "falcon_mamba_7b": 7.3e9,
+                "command_r_plus_104b": 104e9, "qwen2_5_32b": 32e9,
+                "mixtral_8x22b": 141e9, "recurrentgemma_9b": 9e9}
+    for arch, nominal in expected.items():
+        n = get_config(arch).param_count()
+        assert 0.7 * nominal < n < 1.45 * nominal, (arch, n, nominal)

@@ -1,0 +1,122 @@
+"""Substrate: optimizers, checkpointing, data pipeline, HLO analyzer."""
+
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.synthetic import ClassificationTask, lm_batch
+from repro.optim import adamw, apply_updates, cosine_schedule, masked_update, sgd
+from repro.train import checkpoint as ckpt
+
+
+def test_adamw_converges_quadratic():
+    opt = adamw(0.1)
+    params = {"w": jnp.array([5.0, -3.0])}
+    state = opt.init(params)
+    for _ in range(200):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert float(jnp.max(jnp.abs(params["w"]))) < 0.05
+
+
+def test_sgd_momentum_converges():
+    opt = sgd(0.05, momentum=0.9)
+    params = {"w": jnp.array([2.0])}
+    state = opt.init(params)
+    for _ in range(100):
+        grads = jax.grad(lambda p: jnp.sum(p["w"] ** 2))(params)
+        updates, state = opt.update(grads, state, params)
+        params = apply_updates(params, updates)
+    assert abs(float(params["w"][0])) < 0.05
+
+
+def test_masked_update_freezes():
+    updates = {"a": jnp.ones((3,)), "b": jnp.ones((3,))}
+    out = masked_update(updates, {"a": True, "b": False})
+    assert float(out["a"].sum()) == 3.0 and float(out["b"].sum()) == 0.0
+
+
+def test_cosine_schedule_shape():
+    f = cosine_schedule(1.0, warmup=10, total=100)
+    assert float(f(jnp.array(0))) == 0.0
+    assert abs(float(f(jnp.array(10))) - 1.0) < 1e-6
+    assert float(f(jnp.array(100))) < 1e-6
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.float32),
+            "b": {"c": [jnp.ones((4,)), jnp.zeros((2, 2))]}}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        ckpt.save(path, tree, metadata={"step": 7})
+        like = jax.tree.map(jnp.zeros_like, tree)
+        restored = ckpt.restore(path, like)
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b))
+        assert ckpt.load_metadata(path)["step"] == 7
+
+
+def test_checkpoint_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ck.npz")
+        ckpt.save(path, {"a": jnp.ones((2,))})
+        with pytest.raises(ValueError):
+            ckpt.restore(path, {"b": jnp.ones((2,))})
+
+
+def test_lm_batch_deterministic():
+    b1 = lm_batch(0, 3, 4, 32, 256)
+    b2 = lm_batch(0, 3, 4, 32, 256)
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    b3 = lm_batch(0, 4, 4, 32, 256)
+    assert not np.array_equal(np.asarray(b1["tokens"]), np.asarray(b3["tokens"]))
+
+
+def test_classification_task_separable():
+    task = ClassificationTask(n_classes=2, vocab=128, seq_len=16, seed=0)
+    d = task.sample(64, seed_offset=0)
+    assert d["tokens"].shape == (64, 16)
+    # class token sets are disjoint -> bag-of-words should separate classes
+    ct = task._class_tokens()
+    assert len(np.intersect1d(ct[0], ct[1])) == 0
+
+
+# ---------------------------------------------------------------------------
+# HLO analyzer calibration (the roofline's measurement tool)
+# ---------------------------------------------------------------------------
+
+def test_hlo_flops_single_matmul():
+    from repro.launch.hlo_analysis import analyze_hlo
+    a = jnp.zeros((256, 256), jnp.float32)
+    c = jax.jit(lambda a, b: a @ b).lower(a, a).compile()
+    r = analyze_hlo(c.as_text())
+    assert abs(r.flops - 2 * 256 ** 3) / (2 * 256 ** 3) < 0.05
+
+
+def test_hlo_flops_scan_trip_count():
+    from repro.launch.hlo_analysis import analyze_hlo
+    a = jnp.zeros((128, 128), jnp.float32)
+    xs = jnp.zeros((12, 128, 128), jnp.float32)
+    c = jax.jit(lambda a, xs: jax.lax.scan(lambda c, x: (c @ x, None), a, xs)[0]
+                ).lower(a, xs).compile()
+    r = analyze_hlo(c.as_text())
+    expected = 12 * 2 * 128 ** 3
+    assert abs(r.flops - expected) / expected < 0.05
+    assert 12 in r.trip_counts
+
+
+def test_hlo_collective_bytes():
+    from repro.launch.hlo_analysis import analyze_hlo
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    f = jax.shard_map(lambda x: jax.lax.psum(x, "data"), mesh=mesh,
+                      in_specs=P(None), out_specs=P(None))
+    c = jax.jit(f).lower(jnp.zeros((64, 64), jnp.float32)).compile()
+    r = analyze_hlo(c.as_text())
+    assert r.coll_breakdown["all-reduce"] == 64 * 64 * 4
