@@ -8,7 +8,7 @@ privacy budget (fewer trainable params -> less noise dimensions).
 from __future__ import annotations
 
 from benchmarks.common import TASK, row, timer, tiny
-from repro.fed.simulate import run_federated
+from repro.fed.api import FedSession, LocalDP
 
 
 def run(rounds: int = 10) -> list[str]:
@@ -16,10 +16,10 @@ def run(rounds: int = 10) -> list[str]:
     for eps in (6.0, 3.0, 1.0):
         for m in ("fedtt", "lora", "ffa_lora"):
             with timer() as t:
-                res = run_federated(
+                res = FedSession(
                     tiny(m), TASK, n_clients=3, n_rounds=rounds, local_steps=2,
                     batch_size=16, train_per_client=64, eval_n=160, lr=1e-2,
-                    dp_eps=eps, dp_delta=1e-5, dp_clip=2.0, seed=2)
+                    local_dp=LocalDP(eps, 1e-5, 2.0), seed=2).run()
             rows.append(row(f"table4_acc[eps={eps:g}][{m}]", t.us / rounds,
                             f"best_acc={res.best_acc:.3f}"))
     return rows

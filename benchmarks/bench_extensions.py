@@ -3,135 +3,70 @@
 1. Heterogeneous-rank FedTT (the paper's Limitations-section future work):
    3 clients at TT ranks {2, 5, 10} by device capability; matrix-space
    aggregation to a rank-10 server adapter; TT-rounded down-link per client.
+   Runs through ``FedSession`` with the registry's ``HeteroRankStrategy``.
 2. int8 quantized up-link: FedTT with quantized deltas -- a further ~4x
-   up-link cut on top of the paper's 10x, at matched accuracy.
+   up-link cut on top of the paper's 10x, at matched accuracy.  Runs through
+   ``FedSession`` with the ``Int8DeltaChannel`` middleware, whose wire-bytes
+   figure lands in the session's CommLog directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from benchmarks.common import TASK, row, timer, tiny
-from repro.core.tt import tt_reconstruct, tt_svd
 from repro.fed import compress
-from repro.fed.client import local_step_classify
-from repro.fed.heterorank import adapter_spec_at_rank, round_adapter, uplink_params
-from repro.fed.simulate import run_federated
+from repro.fed.api import FedSession
+from repro.fed.channel import Int8DeltaChannel
+from repro.fed.heterorank import adapter_spec_at_rank, uplink_params
+from repro.fed.strategies import HeteroRankStrategy
 from repro.models.peft_glue import adapter_spec
-from repro.models.transformer import classifier_init, forward_classify, model_init
-from repro.optim import adamw
 
 RANKS = (2, 5, 10)
 SERVER_RANK = 10
 
 
-def _eval(backbone, peft, classifier, cfg):
-    batch = TASK.sample(160, seed_offset=2)
-    logits, _ = forward_classify({"backbone": backbone, "peft": peft}, cfg,
-                                 batch, classifier, TASK.n_classes)
-    return float(jnp.mean((jnp.argmax(logits, -1) == batch["labels"])
-                          .astype(jnp.float32)))
-
-
-def _agg_blocks_matrix_space(client_blocks, client_cfgs, server_cfg):
-    """Per (layer, hook, side) matrix-space aggregation across ranks."""
-    server_spec = adapter_spec(server_cfg)
-    n_layers = jax.tree.leaves(client_blocks[0])[0].shape[0]
-    out = {}
-    for hook in ("adapter_attn", "adapter_mlp"):
-        sides = {}
-        for side, spec_of in (("down", lambda s: s.down), ("up", lambda s: s.up)):
-            layers = []
-            for li in range(n_layers):
-                acc = None
-                for cb, cc in zip(client_blocks, client_cfgs):
-                    sp = spec_of(adapter_spec(cc))
-                    fs = [f[li] for f in cb[hook][side]]
-                    m = tt_reconstruct(fs, sp) / len(client_blocks)
-                    acc = m if acc is None else acc + m
-                layers.append(tt_svd(acc, spec_of(server_spec)))
-            sides[side] = [jnp.stack([layers[li][j] for li in range(n_layers)])
-                           for j in range(len(layers[0]))]
-        out[hook] = sides
-    return out
-
-
-def heterorank_run(rounds: int = 8, local_steps: int = 2) -> float:
+def heterorank_run(rounds: int = 8, local_steps: int = 2):
     server_cfg = tiny("fedtt", tt_rank=SERVER_RANK)
-    client_cfgs = [tiny("fedtt", tt_rank=r) for r in RANKS]
-    params = model_init(jax.random.key(0), server_cfg)
-    backbone = params["backbone"]
-    server_blocks = params["peft"]["blocks"]
-    classifier = classifier_init(jax.random.key(1), server_cfg, TASK.n_classes)
-    opt = adamw(1e-2)
-    pool = TASK.sample(3 * 96, seed_offset=1)
-    rng = np.random.default_rng(0)
-    n_layers = jax.tree.leaves(server_blocks)[0].shape[0]
-    best = 0.0
-    for t in range(rounds):
-        client_blocks = []
-        for ci, ccfg in enumerate(client_cfgs):
-            # down-link: TT-round the server adapters to the client's rank
-            blocks = {}
-            for hook in ("adapter_attn", "adapter_mlp"):
-                per_layer = []
-                for li in range(n_layers):
-                    ad = {s: [f[li] for f in server_blocks[hook][s]]
-                          for s in ("down", "up")}
-                    per_layer.append(round_adapter(ad, adapter_spec(server_cfg),
-                                                   RANKS[ci]))
-                blocks[hook] = {
-                    s: [jnp.stack([per_layer[li][s][j] for li in range(n_layers)])
-                        for j in range(len(per_layer[0][s]))]
-                    for s in ("down", "up")}
-            trainable = {"peft": {"blocks": blocks}, "classifier": classifier}
-            st = opt.init(trainable)
-            for _ in range(local_steps):
-                idx = rng.choice(3 * 96, size=32)
-                batch = jax.tree.map(lambda x: x[idx], pool)
-                trainable, st, _ = local_step_classify(
-                    trainable, st, backbone, batch, None, cfg=ccfg,
-                    n_classes=TASK.n_classes, optimizer=opt)
-            client_blocks.append(trainable["peft"]["blocks"])
-            classifier = trainable["classifier"]   # last client's (simplified)
-        server_blocks = _agg_blocks_matrix_space(client_blocks, client_cfgs,
-                                                 server_cfg)
-        acc = _eval(backbone, {"blocks": server_blocks}, classifier, server_cfg)
-        best = max(best, acc)
-    return best
+    strategy = HeteroRankStrategy(server_cfg, ranks=RANKS)
+    return FedSession(server_cfg, TASK, strategy=strategy, n_clients=3,
+                      n_rounds=rounds, local_steps=local_steps, batch_size=32,
+                      train_per_client=96, eval_n=160, lr=1e-2, seed=0).run()
 
 
 def run() -> list[str]:
     rows = []
     with timer() as t:
-        acc = heterorank_run()
+        res_h = heterorank_run()
     up = {r: uplink_params(adapter_spec_at_rank(
         adapter_spec(tiny("fedtt", tt_rank=SERVER_RANK)), r)) for r in RANKS}
-    rows.append(row("ext_heterorank[acc]", t.us, f"best_acc={acc:.3f}"))
+    rows.append(row("ext_heterorank[acc]", t.us, f"best_acc={res_h.best_acc:.3f}"))
     rows.append(row("ext_heterorank[uplink_params_per_client]", t.us,
                     " ".join(f"r{r}={v}" for r, v in up.items())))
+    rows.append(row("ext_heterorank[uplink_kb_per_round]", t.us,
+                    f"{res_h.comm.uplink_kb_per_round[0]:.1f}KB (mean over ranks)"))
 
-    # int8 quantized up-link: accuracy parity + bytes
+    # int8 quantized up-link: accuracy parity + the real wire bytes
+    fed_kw = dict(n_clients=3, n_rounds=8, local_steps=2, batch_size=32,
+                  train_per_client=96, eval_n=160, lr=1e-2, seed=0)
     with timer() as t:
-        res32 = run_federated(tiny("fedtt"), TASK, n_clients=3, n_rounds=8,
-                              local_steps=2, batch_size=32, train_per_client=96,
-                              eval_n=160, lr=1e-2, seed=0)
+        res32 = FedSession(tiny("fedtt"), TASK, **fed_kw).run()
+        res8 = FedSession(tiny("fedtt"), TASK, channel=[Int8DeltaChannel()],
+                          **fed_kw).run()
     from repro.models.transformer import model_init as mi
     peft = mi(jax.random.key(0), tiny("fedtt"))["peft"]
-    q_bytes = compress.payload_bytes(peft)
-    f_bytes = sum(int(np.prod(x.shape)) * 4 for x in jax.tree.leaves(peft))
     qs, scales = compress.quantize_tree(peft)
     back = compress.dequantize_tree(qs, scales)
     err = max(float(jnp.max(jnp.abs(a - b)))
               for a, b in zip(jax.tree.leaves(peft), jax.tree.leaves(back)))
+    kb32 = res32.comm.uplink_kb_per_round[0]
+    kb8 = res8.comm.uplink_kb_per_round[0]
     rows.append(row("ext_int8_uplink[bytes]", t.us,
-                    f"fp32={f_bytes}B int8={q_bytes}B "
-                    f"({f_bytes/q_bytes:.1f}x further cut) maxerr={err:.2e} "
-                    f"fp32_best_acc={res32.best_acc:.3f}"))
+                    f"fp32={kb32:.1f}KB int8={kb8:.1f}KB "
+                    f"({kb32/kb8:.1f}x further cut) maxerr={err:.2e} "
+                    f"fp32_best_acc={res32.best_acc:.3f} "
+                    f"int8_best_acc={res8.best_acc:.3f}"))
     return rows
 
 

@@ -13,7 +13,8 @@ from __future__ import annotations
 
 from benchmarks.common import TASK, cfg_with, row, timer, tiny
 from repro.configs.paper_models import DEBERTA_BASE
-from repro.fed.simulate import run_federated
+from repro.fed.api import FedSession
+from repro.fed.samplers import FractionSampler
 from repro.models.peft_glue import peft_param_count
 
 # Table 1 "# Param." column (DeBERTa-base)
@@ -34,9 +35,10 @@ def run(rounds: int = ROUNDS) -> list[str]:
                         f"ours={n/1e6:.3f}M paper={PAPER_PARAMS_M[m]}M"))
     for m in METHODS:
         with timer() as t:
-            res = run_federated(
+            res = FedSession(
                 tiny(m), TASK, n_clients=5, n_rounds=rounds, local_steps=2,
-                batch_size=32, train_per_client=96, eval_n=160, lr=1e-2, seed=0)
+                batch_size=32, train_per_client=96, eval_n=160, lr=1e-2,
+                seed=0).run()
         # Table 14 protocol: rounds to reach 95% of the method's best accuracy
         target = 0.95 * res.best_acc
         r95 = next(i + 1 for i, a in enumerate(res.acc_history) if a >= target)
@@ -47,10 +49,10 @@ def run(rounds: int = ROUNDS) -> list[str]:
     # Table 2 protocol: large-scale cross-device (client subset per round)
     for m in ("fedtt", "lora"):
         with timer() as t:
-            res = run_federated(
-                tiny(m), TASK, n_clients=40, n_rounds=rounds, local_steps=2,
-                batch_size=32, train_per_client=32, eval_n=160, lr=1e-2,
-                client_fraction=0.25, seed=0)
+            res = FedSession(
+                tiny(m), TASK, sampler=FractionSampler(0.25), n_clients=40,
+                n_rounds=rounds, local_steps=2, batch_size=32,
+                train_per_client=32, eval_n=160, lr=1e-2, seed=0).run()
         rows.append(row(f"table2_lscd_acc[{m}]", t.us / rounds,
                         f"best_acc={res.best_acc:.3f} (40 clients, 10/round)"))
     return rows

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 from benchmarks.common import TASK, row, timer, tiny
 from repro.data.synthetic import PAPER_SPLITS
-from repro.fed.simulate import run_federated
+from repro.fed.api import FedSession
 
 SETTINGS = {
     "iid": None,
@@ -33,7 +33,7 @@ def eq2_interference(method: str, props, local_steps: int = 20,
     from repro.core.tt import tt_reconstruct
     from repro.data.synthetic import label_skew_partition
     from repro.fed.client import local_step_classify
-    from repro.fed.rounds import trainable_mask
+    from repro.fed.strategies import trainable_mask
     from repro.models.peft_glue import adapter_spec
     from repro.models.transformer import classifier_init, model_init
     from repro.optim import adamw
@@ -75,11 +75,11 @@ def run(rounds: int = 12, local_steps: int = 6) -> list[str]:
     for dist_name, props in SETTINGS.items():
         for m in METHODS:
             with timer() as t:
-                res = run_federated(
+                res = FedSession(
                     tiny(m), TASK, n_clients=3, n_rounds=rounds,
                     local_steps=local_steps, batch_size=32,
                     train_per_client=96, eval_n=160, lr=1e-2,
-                    hetero_proportions=props, seed=1)
+                    hetero_proportions=props, seed=1).run()
             rows.append(row(f"table3_acc[{dist_name}][{m}]", t.us / rounds,
                             f"best_acc={res.best_acc:.3f}"))
     # Eq. 2 mechanism: the aggregation-interference norm FedTT+ exists to fix

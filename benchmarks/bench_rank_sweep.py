@@ -9,7 +9,7 @@ from __future__ import annotations
 
 from benchmarks.common import TASK, cfg_with, row, timer, tiny
 from repro.configs.paper_models import DEBERTA_BASE
-from repro.fed.simulate import run_federated
+from repro.fed.api import FedSession
 from repro.models.peft_glue import peft_param_count
 
 PAPER_PARAMS_M = {2: 0.03, 5: 0.06, 10: 0.17}
@@ -21,10 +21,10 @@ def run(rounds: int = 10) -> list[str]:
         n = peft_param_count(cfg_with(DEBERTA_BASE, "fedtt", tt_rank=rank),
                              n_classes=2)
         with timer() as t:
-            res = run_federated(
+            res = FedSession(
                 tiny("fedtt", tt_rank=rank), TASK, n_clients=5,
                 n_rounds=rounds, local_steps=1, batch_size=32,
-                train_per_client=96, eval_n=160, lr=1e-2, seed=3)
+                train_per_client=96, eval_n=160, lr=1e-2, seed=3).run()
         rows.append(row(f"table7_rank[{rank}]", t.us / rounds,
                         f"params={n/1e6:.3f}M(paper {PAPER_PARAMS_M[rank]}M) "
                         f"best_acc={res.best_acc:.3f}"))

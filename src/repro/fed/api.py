@@ -1,0 +1,186 @@
+"""Unified federated orchestration API.
+
+One entry point, four orthogonal pluggable pieces:
+
+  * **Strategy** (``fed/strategies.py``): which leaves train/are sent per
+    round + the server aggregation rule (fedtt, fedtt_plus, lora, ffa_lora,
+    rolora, heterorank, ... -- registry-backed).
+  * **ClientSampler** (``fed/samplers.py``): full participation (cross-silo)
+    vs per-round fraction / importance subsets (cross-device).
+  * **Channel** (``fed/channel.py``): composable up-link middleware stack
+    (fp32 identity, int8 delta quantization, Gaussian DP perturbation), each
+    stage reporting its own wire bytes into the :class:`CommLog`.
+  * **Backend** (``fed/backends.py``): the python-loop simulator vs the
+    vmap/mesh-sharded one-jit-per-round executor.
+
+Typical use::
+
+    from repro.fed.api import FedSession
+
+    res = FedSession(cfg, task, strategy="fedtt_plus", sampler=0.25,
+                     n_clients=40, n_rounds=20, local_steps=2).run()
+    print(res.best_acc, res.comm.total_kb)
+
+The legacy ``repro.fed.simulate.run_federated(...)`` forwards here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.data.synthetic import ClassificationTask, label_skew_partition
+from repro.fed import dp as dp_lib
+from repro.fed.backends import Backend, RoundPlan, get_backend
+from repro.fed.channel import Channel, ChannelStack, get_channel
+from repro.fed.comm import CommLog
+from repro.fed.samplers import ClientSampler, get_sampler
+from repro.fed.strategies import Strategy, count_true, get_strategy
+from repro.models.transformer import classifier_init, forward_classify, model_init
+from repro.optim import adamw
+
+
+@dataclasses.dataclass
+class FedResult:
+    """Outcome of a federated run: accuracy curve, communication ledger,
+    parameter accounting, and the final aggregated trainable pytree."""
+    acc_history: list
+    comm: CommLog
+    n_trainable: int
+    n_communicated_round0: int
+    best_acc: float
+    trainable: dict | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalDP:
+    """Per-step local DP-SGD knobs (paper §5.6): clip per-example grads to
+    ``clip`` and add Gaussian noise calibrated to (eps, delta)."""
+    eps: float
+    delta: float = 1e-5
+    clip: float = 2.0
+
+
+class FedSession:
+    """A configured federated fine-tuning run: construct, ``run()``, inspect
+    the returned :class:`FedResult` / :class:`CommLog`."""
+
+    def __init__(self, cfg: ModelConfig, task: ClassificationTask, *,
+                 strategy: Strategy | str | None = None,
+                 sampler: ClientSampler | float | None = None,
+                 channel: ChannelStack | Channel | list | None = None,
+                 backend: Backend | str = "loop",
+                 n_clients: int = 5, n_rounds: int = 20, local_steps: int = 1,
+                 batch_size: int = 16, lr: float = 1e-3, optimizer=None,
+                 train_per_client: int = 128, eval_n: int = 256,
+                 hetero_proportions=None, hetero_alpha: float | None = None,
+                 local_dp: LocalDP | None = None, seed: int = 0):
+        self.cfg = cfg
+        self.task = task
+        self.strategy = (get_strategy(cfg.peft.method, cfg) if strategy is None
+                         else get_strategy(strategy, cfg))
+        self.sampler = get_sampler(sampler)
+        self.channel = get_channel(channel)
+        self.backend = get_backend(backend)
+        self.n_clients = n_clients
+        self.n_rounds = n_rounds
+        self.local_steps = local_steps
+        self.batch_size = batch_size
+        self.optimizer = optimizer if optimizer is not None else adamw(lr)
+        self.train_per_client = train_per_client
+        self.eval_n = eval_n
+        self.hetero_proportions = hetero_proportions
+        self.hetero_alpha = hetero_alpha
+        self.local_dp = local_dp
+        self.seed = seed
+
+        # populated by _setup(); read by the backends
+        self.pool = None
+        self.shards = None
+        self.backbone = None
+        self.dp_key = None
+        self.dp_sigma = None
+
+    # ------------------------------------------------------------------
+    def _setup(self):
+        rng = np.random.default_rng(self.seed)
+        key = jax.random.key(self.seed)
+        kb, kc, ke = jax.random.split(key, 3)
+
+        params = model_init(kb, self.cfg)
+        self.backbone = params["backbone"]
+        global_trainable = {
+            "peft": params["peft"],
+            "classifier": classifier_init(kc, self.cfg, self.task.n_classes)}
+
+        pool = self.task.sample(self.n_clients * self.train_per_client,
+                                seed_offset=1)
+        labels_np = np.asarray(pool["labels"])
+        self.pool = pool
+        self.shards = label_skew_partition(
+            labels_np, self.n_clients, proportions=self.hetero_proportions,
+            alpha=self.hetero_alpha, seed=self.seed)
+        self.sampler.bind([len(s) for s in self.shards])
+        eval_batch = self.task.sample(self.eval_n, seed_offset=2)
+
+        cfg, task = self.cfg, self.task
+        backbone = self.backbone
+
+        @jax.jit
+        def eval_acc(trainable):
+            logits, _ = forward_classify(
+                {"backbone": backbone, "peft": trainable["peft"]}, cfg,
+                eval_batch, trainable["classifier"], task.n_classes)
+            return jnp.mean((jnp.argmax(logits, -1)
+                             == eval_batch["labels"]).astype(jnp.float32))
+
+        self.dp_key = ke
+        if self.local_dp is not None:
+            q = self.batch_size / max(self.train_per_client, 1)
+            self.dp_sigma = dp_lib.noise_multiplier(
+                self.local_dp.eps, self.local_dp.delta, q,
+                self.n_rounds * self.local_steps)
+
+        return rng, global_trainable, eval_acc
+
+    def _plan_round(self, round_idx: int, rng: np.random.Generator) -> RoundPlan:
+        selected = self.sampler.select(round_idx, self.n_clients, rng)
+        batch_idx = np.stack([
+            np.stack([rng.choice(self.shards[ci], size=self.batch_size,
+                                 replace=len(self.shards[ci]) < self.batch_size)
+                      for _ in range(self.local_steps)])
+            for ci in selected])
+        return RoundPlan(selected=np.asarray(selected), batch_idx=batch_idx)
+
+    # ------------------------------------------------------------------
+    def run(self) -> FedResult:
+        rng, global_trainable, eval_acc = self._setup()
+
+        comm = CommLog()
+        acc_history = []
+        n_trainable = count_true(self.strategy.mask(global_trainable, 0),
+                                 global_trainable)
+        n_comm0 = None
+
+        for t in range(self.n_rounds):
+            plan = self._plan_round(t, rng)
+            global_trainable, kb, stage_kb = self.backend.run_round(
+                self, global_trainable, plan, t)
+            comm.record(kb, stages=stage_kb)
+            if n_comm0 is None:
+                n_comm0 = count_true(self.strategy.mask(global_trainable, 0),
+                                     global_trainable)
+            acc_history.append(float(eval_acc(global_trainable)))
+
+        return FedResult(acc_history=acc_history, comm=comm,
+                         n_trainable=n_trainable,
+                         n_communicated_round0=n_comm0,
+                         best_acc=max(acc_history),
+                         trainable=global_trainable)
+
+
+__all__ = ["FedResult", "FedSession", "LocalDP"]

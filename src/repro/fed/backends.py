@@ -1,0 +1,200 @@
+"""Execution backends for :class:`repro.fed.api.FedSession`.
+
+Both backends execute the same round semantics -- sample clients, K local
+updates per client, channel up-link, strategy aggregation -- and agree to
+floating-point tolerance on the aggregated trainable pytree:
+
+  * :class:`LoopBackend`: python loop over clients with a shared jit'd local
+    step.  Supports every strategy (including heterorank's per-client TT
+    ranks), per-step DP-SGD, and any channel stack.
+  * :class:`ShardedBackend`: all clients advance inside one jitted
+    ``vmap``/scan (``fed/fedrun.py``); with a transparent channel the
+    aggregation is the stacked mean that lowers to one all-reduce over the
+    mesh ``data`` axis.  Non-transparent channels (int8, DP noise) unstack
+    per client before aggregation; per-step DP-SGD is loop-only.
+
+A backend consumes the session's precomputed :class:`RoundPlan` (selected
+clients + batch indices), so both backends see identical data order and can
+be compared leaf-for-leaf.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed import dp as dp_lib
+from repro.fed.client import classify_loss, local_step_classify
+from repro.fed.fedrun import client_updates_sharded
+from repro.optim import apply_updates, masked_update
+
+
+@dataclasses.dataclass
+class RoundPlan:
+    """Deterministic work order for one round (shared by both backends)."""
+    selected: np.ndarray     # (n_sel,) client ids
+    batch_idx: np.ndarray    # (n_sel, K, B) indices into the data pool
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_classes", "optimizer", "clip",
+                                   "sigma"))
+def _dp_local_step(trainable, opt_state, backbone, batch, freeze_mask,
+                   step_key, *, cfg, n_classes, optimizer, clip: float,
+                   sigma: float):
+    """One DP-SGD local step: per-example clipped + noised gradients."""
+    def per_ex_loss(tr, ex):
+        ex_b = jax.tree.map(lambda x: x[None], ex)
+        loss, _ = classify_loss(tr, backbone, cfg, ex_b, n_classes)
+        return loss
+
+    grads = dp_lib.dp_grads(per_ex_loss, trainable, batch, step_key,
+                            clip=clip, sigma=sigma)
+    if freeze_mask is not None:
+        grads = masked_update(grads, freeze_mask)
+    updates, opt_state = optimizer.update(grads, opt_state, trainable)
+    return apply_updates(trainable, updates), opt_state
+
+
+def _tree_sub(a, b):
+    return jax.tree.map(lambda x, y: x - y, a, b)
+
+
+def _tree_add(a, b):
+    return jax.tree.map(lambda x, y: (x + y).astype(x.dtype), a, b)
+
+
+class Backend:
+    """Runs one communication round; the session owns the outer loop."""
+
+    name: str = "?"
+
+    def run_round(self, session, global_trainable, plan: RoundPlan,
+                  round_idx: int):
+        """Returns (new global trainable, per-client up-link KB,
+        per-stage KB dict)."""
+        raise NotImplementedError
+
+
+class LoopBackend(Backend):
+    """Python loop over clients, shared jit'd step (the simulation path)."""
+
+    name = "loop"
+
+    def run_round(self, session, global_trainable, plan, round_idx):
+        strat, stack = session.strategy, session.channel
+        mask_g = strat.mask(global_trainable, round_idx)
+
+        client_trees, kb_clients, stage_acc = [], [], {}
+        opt_template = None   # shared zero-state for the view-is-global case
+        for i, ci in enumerate(plan.selected):
+            view, ccfg = strat.client_view(global_trainable, int(ci))
+            cfg_c = ccfg if ccfg is not None else session.cfg
+            mask_c = (mask_g if view is global_trainable
+                      else strat.mask(view, round_idx))
+            if view is global_trainable:
+                if opt_template is None:
+                    opt_template = session.optimizer.init(view)
+                opt_state = opt_template
+            else:
+                opt_state = session.optimizer.init(view)
+            tr = view
+            for k in range(session.local_steps):
+                batch = jax.tree.map(lambda x: x[plan.batch_idx[i, k]],
+                                     session.pool)
+                if session.local_dp is not None:
+                    sk = jax.random.fold_in(
+                        session.dp_key,
+                        round_idx * 131 + int(ci) * 17 + k)
+                    tr, opt_state = _dp_local_step(
+                        tr, opt_state, session.backbone, batch, mask_c, sk,
+                        cfg=cfg_c, n_classes=session.task.n_classes,
+                        optimizer=session.optimizer,
+                        clip=session.local_dp.clip, sigma=session.dp_sigma)
+                else:
+                    tr, opt_state, _ = local_step_classify(
+                        tr, opt_state, session.backbone, batch, mask_c,
+                        cfg=cfg_c, n_classes=session.task.n_classes,
+                        optimizer=session.optimizer)
+            if stack.transparent:
+                # identity wire: skip the delta round trip (exact fp path)
+                wire, per_stage = stack.account(tr, mask_c)
+                client_trees.append(tr)
+            else:
+                delta, wire, per_stage = stack.uplink(_tree_sub(tr, view),
+                                                      mask_c)
+                client_trees.append(_tree_add(view, delta))
+            kb_clients.append(wire / 1024)
+            for name, b in per_stage.items():
+                stage_acc.setdefault(name, []).append(b / 1024)
+
+        new_global = strat.aggregate(client_trees, mask_g)
+        return (new_global, float(np.mean(kb_clients)),
+                {n: float(np.mean(v)) for n, v in stage_acc.items()})
+
+
+class ShardedBackend(Backend):
+    """All selected clients advance inside one jitted vmap/scan round."""
+
+    name = "sharded"
+
+    def run_round(self, session, global_trainable, plan, round_idx):
+        if session.local_dp is not None:
+            raise ValueError("per-step DP-SGD needs backend='loop' "
+                             "(per-example vmap inside the client loop)")
+        strat, stack = session.strategy, session.channel
+        mask_g = strat.mask(global_trainable, round_idx)
+
+        views = [strat.client_view(global_trainable, int(ci), uniform=True)[0]
+                 for ci in plan.selected]
+        stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *views)
+        stacked_opt = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[session.optimizer.init(v) for v in views])
+        batches = jax.tree.map(lambda x: x[plan.batch_idx], session.pool)
+
+        new_tr, _, _ = client_updates_sharded(
+            stacked, stacked_opt, session.backbone, batches, mask_g,
+            cfg=session.cfg, n_classes=session.task.n_classes,
+            optimizer=session.optimizer)
+
+        if stack.transparent and strat.supports_stacked:
+            # the production path: stacked mean == one all-reduce
+            agg = strat.aggregate_stacked(new_tr, mask_g)
+            new_global = jax.tree.map(lambda x: x[0], agg)
+            wire, per_stage = stack.account(global_trainable, mask_g)
+        else:
+            client_trees, wires, stage_acc = [], [], {}
+            for i in range(len(views)):
+                tr_i = jax.tree.map(lambda x, i=i: x[i], new_tr)
+                if stack.transparent:
+                    wire, per_stage = stack.account(tr_i, mask_g)
+                    client_trees.append(tr_i)
+                else:
+                    delta, wire, per_stage = stack.uplink(
+                        _tree_sub(tr_i, views[i]), mask_g)
+                    client_trees.append(_tree_add(views[i], delta))
+                wires.append(wire)
+                for name, b in per_stage.items():
+                    stage_acc.setdefault(name, []).append(b)
+            new_global = strat.aggregate(client_trees, mask_g)
+            wire = float(np.mean(wires))
+            per_stage = {n: float(np.mean(v)) for n, v in stage_acc.items()}
+
+        return (new_global, wire / 1024,
+                {n: b / 1024 for n, b in per_stage.items()})
+
+
+_BACKENDS = {"loop": LoopBackend, "sharded": ShardedBackend}
+
+
+def get_backend(spec) -> Backend:
+    if isinstance(spec, Backend):
+        return spec
+    if spec in _BACKENDS:
+        return _BACKENDS[spec]()
+    raise KeyError(f"unknown backend {spec!r}; "
+                   f"registered: {tuple(sorted(_BACKENDS))}")

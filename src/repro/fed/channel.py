@@ -1,0 +1,176 @@
+"""Composable up-link channel middleware.
+
+Each stage models one transformation the client update undergoes between the
+device and the server: the fp32 identity wire (the paper's accounting, 4 B
+per communicated scalar), int8 delta quantization (``fed/compress.py``), or
+Gaussian update perturbation (``fed/dp.py`` clipping + noise -- the
+*output-perturbation* flavour of local DP; per-step DP-SGD lives in the loop
+backend via ``FedSession(local_dp=...)``).
+
+Stages compose into a :class:`ChannelStack`.  Every stage reports its own
+wire-bytes figure; the stack's figure is the LAST stage that actually
+re-encodes the payload (later stages sit closer to the wire), so e.g.
+``[Int8DeltaChannel()]`` makes the ledger count the int8 payload actually
+sent rather than fp32 params -- the accounting is no longer re-derived by
+every caller.
+
+Stages operate on the client *delta* (trained - downlinked view), touching
+only mask-True leaves: frozen leaves are not communicated (their delta is
+identically zero) and contribute no bytes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed import compress, dp as dp_lib
+from repro.fed.strategies import count_true
+
+BYTES_PER_PARAM = 4  # fp32 wire format, the paper's accounting
+
+
+def _masked_leaves(tree, mask):
+    return [(x, m) for x, m in zip(jax.tree.leaves(tree),
+                                   jax.tree.leaves(mask))]
+
+
+class Channel:
+    """One up-link middleware stage."""
+
+    name = "identity"
+    #: True when transform() is the identity (pure accounting stage); lets
+    #: the sharded backend keep its single stacked all-reduce.
+    transparent = True
+
+    def transform(self, delta, mask):
+        """What the server decodes: the delta after this stage's round trip
+        (quantize/dequantize, noise, ...).  Identity by default."""
+        del mask
+        return delta
+
+    def wire_bytes(self, delta, mask) -> int | None:
+        """Per-client bytes this stage puts on the wire, or None if the
+        stage does not re-encode the payload (e.g. pure noise)."""
+        del delta, mask
+        return None
+
+
+class IdentityFP32(Channel):
+    """Uncompressed fp32 factors: the paper's 4 B/param accounting."""
+
+    name = "fp32"
+
+    def wire_bytes(self, delta, mask):
+        return BYTES_PER_PARAM * count_true(mask, delta)
+
+
+class Int8DeltaChannel(Channel):
+    """int8 delta quantization (1 B/param + one 4 B scale per tensor).
+
+    The server sees the dequantized delta, exactly like
+    ``compress.apply_quantized_deltas`` (dequantize -> average -> apply)."""
+
+    name = "int8"
+    transparent = False
+
+    def transform(self, delta, mask):
+        def roundtrip(x, m):
+            if not m:
+                return x
+            q, scale = compress.quantize_tree(x)
+            return compress.dequantize_tree(q, scale)
+        return jax.tree.map(roundtrip, delta, mask)
+
+    def wire_bytes(self, delta, mask):
+        total = 0
+        for x, m in _masked_leaves(delta, mask):
+            if m:
+                total += int(np.prod(x.shape)) + 4   # int8 payload + scale
+        return total
+
+
+class DPGaussianChannel(Channel):
+    """Clip the update to norm ``clip`` and add N(0, (sigma*clip)^2) noise
+    before it leaves the device (local DP by output perturbation)."""
+
+    name = "dp_noise"
+    transparent = False
+
+    def __init__(self, clip: float = 1.0, sigma: float = 0.1, seed: int = 0):
+        self.clip = float(clip)
+        self.sigma = float(sigma)
+        self._key = jax.random.key(seed)
+        self._n_calls = 0
+
+    def transform(self, delta, mask):
+        sent = jax.tree.map(lambda x, m: x if m else jnp.zeros_like(x),
+                            delta, mask)
+        sent = dp_lib.clip_tree(sent, self.clip)
+        self._n_calls += 1
+        key = jax.random.fold_in(self._key, self._n_calls)
+        keys = jax.random.split(key, len(jax.tree.leaves(sent)))
+        it = iter(keys)
+
+        def noise(x, m):
+            k = next(it)
+            if not m:
+                return x
+            return x + self.sigma * self.clip * jax.random.normal(k, x.shape,
+                                                                  x.dtype)
+        return jax.tree.map(noise, sent, mask)
+
+
+class ChannelStack:
+    """An ordered stack of channel stages (first = closest to training,
+    last = closest to the wire)."""
+
+    def __init__(self, stages=None):
+        if stages is None:
+            stages = []
+        elif isinstance(stages, Channel):
+            stages = [stages]
+        self.stages = list(stages)
+        for s in self.stages:
+            if not isinstance(s, Channel):
+                raise TypeError(f"not a Channel stage: {s!r}")
+
+    @property
+    def transparent(self) -> bool:
+        return all(s.transparent for s in self.stages)
+
+    def account(self, tree, mask):
+        """(wire bytes per client, per-stage bytes) without transforming.
+
+        Wire bytes depend only on shapes, so any tree with the payload's
+        structure works.  Falls back to fp32 accounting when no stage
+        re-encodes."""
+        per_stage = {}
+        wire = None
+        for s in self.stages:
+            b = s.wire_bytes(tree, mask)
+            if b is not None:
+                per_stage[s.name] = b
+                wire = b
+        if wire is None:
+            wire = BYTES_PER_PARAM * count_true(mask, tree)
+            per_stage.setdefault("fp32", wire)
+        return wire, per_stage
+
+    def uplink(self, delta, mask):
+        """Run the delta through every stage.
+
+        Returns (delta as decoded by the server, wire bytes per client,
+        per-stage bytes dict)."""
+        for s in self.stages:
+            delta = s.transform(delta, mask)
+        wire, per_stage = self.account(delta, mask)
+        return delta, wire, per_stage
+
+
+def get_channel(spec) -> ChannelStack:
+    """None / a Channel / a sequence of Channels / a ChannelStack."""
+    if isinstance(spec, ChannelStack):
+        return spec
+    return ChannelStack(spec)

@@ -13,7 +13,7 @@ import dataclasses
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.fed.rounds import count_true, trainable_mask
+from repro.fed.strategies import count_true, trainable_mask
 from repro.models.peft_glue import peft_param_count
 
 
@@ -59,12 +59,19 @@ def _chain_sent(tt_spec) -> list[int]:
 
 @dataclasses.dataclass
 class CommLog:
-    """Accumulates the transmitted-bytes ledger of a federated run."""
+    """Accumulates the transmitted-bytes ledger of a federated run.
+
+    ``stage_kb`` breaks the per-round figure down by channel stage (e.g.
+    ``{"fp32": [...], "int8": [...]}``) so each middleware's wire cost is
+    visible without re-deriving it."""
     uplink_kb_per_round: list = dataclasses.field(default_factory=list)
+    stage_kb: dict = dataclasses.field(default_factory=dict)
     rounds_to_target: int | None = None
 
-    def record(self, kb: float):
+    def record(self, kb: float, stages: dict | None = None):
         self.uplink_kb_per_round.append(kb)
+        for name, skb in (stages or {}).items():
+            self.stage_kb.setdefault(name, []).append(skb)
 
     @property
     def total_kb(self) -> float:

@@ -6,9 +6,10 @@ that shards over the mesh `data` axis; the K local updates run under
 FedAvg aggregation is a mean over the client axis — which lowers to exactly
 one all-reduce whose payload is the FedTT up-link.
 
-This is the production-counterpart of fed/simulate.py's python loop, and what
-the multi-pod dry-run exercises implicitly through the gradient all-reduce of
-replicated adapters.
+``client_updates_sharded`` is the jitted local-update phase; the sharded
+:class:`~repro.fed.backends.ShardedBackend` composes it with a pluggable
+Strategy's aggregation.  ``fed_round_sharded`` keeps the original fused
+round (local updates + stacked FedAvg) for direct callers.
 """
 
 from __future__ import annotations
@@ -20,21 +21,20 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.fed.client import classify_loss
-from repro.fed.rounds import aggregate_stacked
+from repro.fed.strategies import aggregate_stacked
 from repro.optim import apply_updates, masked_update
 
 
-@partial(jax.jit, static_argnames=("cfg", "n_classes", "optimizer", "local_steps"))
-def fed_round_sharded(stacked_trainable, stacked_opt, backbone, batches,
-                      freeze_mask, *, cfg: ModelConfig, n_classes: int,
-                      optimizer, local_steps: int):
-    """One communication round for N stacked clients.
+@partial(jax.jit, static_argnames=("cfg", "n_classes", "optimizer"))
+def client_updates_sharded(stacked_trainable, stacked_opt, backbone, batches,
+                           freeze_mask, *, cfg: ModelConfig, n_classes: int,
+                           optimizer):
+    """K local updates for N stacked clients (no aggregation).
 
     stacked_trainable: pytree with leading N axis.
     batches: pytree with leading (N, K) axes (client-local data).
-    Returns (aggregated-and-broadcast trainable, new opt states, metrics).
+    Returns (per-client trainables, new opt states, mean client loss).
     """
-
     def client_update(trainable, opt_state, client_batches):
         def one_step(carry, batch):
             tr, opt = carry
@@ -51,8 +51,24 @@ def fed_round_sharded(stacked_trainable, stacked_opt, backbone, batches,
 
     new_tr, new_opt, losses = jax.vmap(client_update)(
         stacked_trainable, stacked_opt, batches)
+    return new_tr, new_opt, losses.mean()
+
+
+@partial(jax.jit, static_argnames=("cfg", "n_classes", "optimizer", "local_steps"))
+def fed_round_sharded(stacked_trainable, stacked_opt, backbone, batches,
+                      freeze_mask, *, cfg: ModelConfig, n_classes: int,
+                      optimizer, local_steps: int):
+    """One communication round for N stacked clients (updates + FedAvg),
+    fused into one program so the aggregation lowers to the single
+    all-reduce.
+
+    Returns (aggregated-and-broadcast trainable, new opt states, metrics)."""
+    del local_steps   # K is carried by the batches' second axis
+    new_tr, new_opt, mean_loss = client_updates_sharded(
+        stacked_trainable, stacked_opt, backbone, batches, freeze_mask,
+        cfg=cfg, n_classes=n_classes, optimizer=optimizer)
     agg = aggregate_stacked(new_tr, freeze_mask)
-    return agg, new_opt, {"mean_client_loss": losses.mean()}
+    return agg, new_opt, {"mean_client_loss": mean_loss}
 
 
 def stack_clients(trainable, n: int):

@@ -1,105 +1,12 @@
-"""FedTT (Alg. 1) and FedTT+ (Alg. 2) round logic: trainable/communicated
-parameter selection per communication round.
-
-FedTT+: in round t, for every tensorized layer with factors G_1..G_J, the
-trainable set is {G_1, G_r, G_J} with r = (t mod (J-2)) + 2  (r in {2..J-1});
-all other middle factors stay frozen and identical across clients, which
-makes FedAvg-of-factors equal FedAvg-of-products for the frozen chain
-segments (paper Eq. 2 -> Eq. 3).  The classifier (and biases) always train.
-
-LoRA variants for comparison: FFA-LoRA freezes A forever; RoLoRA alternates
-A (even rounds) / B (odd rounds).
-"""
+"""Compat shim: the FedTT / FedTT+ round logic moved to
+``repro.fed.strategies`` (registry-backed Strategy objects usable from
+``repro.fed.api.FedSession``).  Existing imports keep working through these
+re-exports."""
 
 from __future__ import annotations
 
-import jax
-import jax.numpy as jnp
-import numpy as np
+from repro.fed.strategies import (aggregate, aggregate_stacked, count_true,
+                                  fedtt_plus_factor_mask, trainable_mask)
 
-from repro.configs.base import ModelConfig
-
-
-def _mask_like(tree, value: bool):
-    return jax.tree.map(lambda _: value, tree)
-
-
-def fedtt_plus_factor_mask(n_factors: int, round_idx: int) -> list[bool]:
-    """Trainable mask over a J-factor chain for round t."""
-    j = n_factors
-    if j <= 3:
-        return [True] * j
-    r = (round_idx % (j - 2)) + 2          # r in {2, .., J-1}, 1-indexed
-    return [(i + 1) in (1, r, j) for i in range(j)]
-
-
-def _blocks_mask(blocks: dict, cfg: ModelConfig, round_idx: int):
-    """Mask over the per-block PEFT params for this round."""
-    m = cfg.peft.method
-    if m == "fedtt_plus":
-        def adapter_mask(ad):
-            return {side: fedtt_plus_factor_mask(len(ad[side]), round_idx)
-                    for side in ("down", "up")}
-        return {hook: adapter_mask(blocks[hook]) for hook in blocks}
-    if m == "ffa_lora":
-        return {h: {"A": False, "B": True} for h in blocks}
-    if m == "rolora":
-        train_a = (round_idx % 2 == 0)
-        return {h: {"A": train_a, "B": not train_a} for h in blocks}
-    return _mask_like(blocks, True)
-
-
-def trainable_mask(tree: dict, cfg: ModelConfig, round_idx: int) -> dict:
-    """Bool pytree over the trainable params: which leaves train (and are
-    sent) this round.  `tree` is either the peft dict itself or a wrapper
-    like {"peft": ..., "classifier": ...} (classifier/prompt always train,
-    Alg. 2 note)."""
-    mask = _mask_like(tree, True)
-    peft = tree["peft"] if "peft" in tree else tree
-    if "blocks" in peft:
-        bm = _blocks_mask(peft["blocks"], cfg, round_idx)
-        if "peft" in tree:
-            mask["peft"] = dict(mask["peft"], blocks=bm)
-        else:
-            mask = dict(mask, blocks=bm)
-    return mask
-
-
-def aggregate(client_pefts: list[dict], mask: dict | None = None) -> dict:
-    """FedAvg over client PEFT pytrees (Alg. 1 line 8 / Alg. 2 line 10).
-
-    Frozen leaves are identical across clients by construction; averaging
-    them is a no-op, but with `mask` we take client 0's copy explicitly
-    (documenting that they are NOT communicated)."""
-    n = len(client_pefts)
-    avg = jax.tree.map(lambda *xs: sum(xs) / n, *client_pefts)
-    if mask is None:
-        return avg
-    return jax.tree.map(lambda a, first, m: a if m else first,
-                        avg, client_pefts[0], mask)
-
-
-def aggregate_stacked(stacked_peft: dict, mask: dict | None = None) -> dict:
-    """Sharded-mode FedAvg: peft leaves have a leading client axis (sharded
-    over the mesh `data` axis); the mean over axis 0 lowers to the FedTT
-    up-link all-reduce.  Returns the broadcast (stacked) result."""
-    n = jax.tree.leaves(stacked_peft)[0].shape[0]
-
-    def agg_leaf(x, m=True):
-        if not m:
-            return x
-        mean = jnp.mean(x, axis=0, keepdims=True)
-        return jnp.broadcast_to(mean, x.shape).astype(x.dtype)
-
-    if mask is None:
-        return jax.tree.map(agg_leaf, stacked_peft)
-    return jax.tree.map(lambda x, m: agg_leaf(x, m), stacked_peft, mask)
-
-
-def count_true(mask_tree, params_tree) -> int:
-    """Number of scalar params whose mask is True (communicated count)."""
-    total = 0
-    for m, p in zip(jax.tree.leaves(mask_tree), jax.tree.leaves(params_tree)):
-        if m:
-            total += int(np.prod(p.shape))
-    return total
+__all__ = ["aggregate", "aggregate_stacked", "count_true",
+           "fedtt_plus_factor_mask", "trainable_mask"]

@@ -1,0 +1,90 @@
+"""Client participation sampling for federated rounds.
+
+Cross-silo runs use :class:`FullParticipation` (every client, every round,
+paper Tables 1/3); large-scale cross-device runs select a per-round subset --
+uniformly (:class:`FractionSampler`, paper Table 2's 10-of-40 protocol) or
+proportionally to local data size (:class:`ImportanceSampler`, the standard
+FedAvg weighting for unbalanced shards)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+class ClientSampler:
+    """Selects the client subset for each round.
+
+    ``bind(shard_sizes)`` is called once by the session after partitioning so
+    data-dependent samplers can weight by local dataset size."""
+
+    name = "full"
+
+    def bind(self, shard_sizes: list[int]) -> None:
+        del shard_sizes
+
+    def select(self, round_idx: int, n_clients: int,
+               rng: np.random.Generator) -> np.ndarray:
+        raise NotImplementedError
+
+
+class FullParticipation(ClientSampler):
+    """Every client participates every round (cross-silo)."""
+
+    name = "full"
+
+    def select(self, round_idx, n_clients, rng):
+        del round_idx, rng
+        return np.arange(n_clients)
+
+
+class FractionSampler(ClientSampler):
+    """A uniform random fraction of clients per round (cross-device)."""
+
+    name = "fraction"
+
+    def __init__(self, fraction: float):
+        if not 0.0 < fraction <= 1.0:
+            raise ValueError(f"fraction must be in (0, 1], got {fraction}")
+        self.fraction = float(fraction)
+
+    def _n_sel(self, n_clients: int) -> int:
+        return max(1, int(round(self.fraction * n_clients)))
+
+    def select(self, round_idx, n_clients, rng):
+        del round_idx
+        return rng.choice(n_clients, size=self._n_sel(n_clients), replace=False)
+
+
+class ImportanceSampler(FractionSampler):
+    """Sample clients proportionally to weights (default: shard sizes)."""
+
+    name = "importance"
+
+    def __init__(self, fraction: float, weights: list[float] | None = None):
+        super().__init__(fraction)
+        self.weights = None if weights is None else np.asarray(weights, float)
+
+    def bind(self, shard_sizes):
+        if self.weights is None:
+            self.weights = np.asarray(shard_sizes, float)
+
+    def select(self, round_idx, n_clients, rng):
+        del round_idx
+        w = (self.weights if self.weights is not None
+             else np.ones(n_clients))
+        p = w / w.sum()
+        return rng.choice(n_clients, size=self._n_sel(n_clients),
+                          replace=False, p=p)
+
+
+def get_sampler(spec) -> ClientSampler:
+    """None -> full participation; a float -> FractionSampler; or an
+    instance."""
+    if spec is None:
+        return FullParticipation()
+    if isinstance(spec, ClientSampler):
+        return spec
+    if isinstance(spec, (int, float)):
+        f = float(spec)
+        return FullParticipation() if f >= 1.0 else FractionSampler(f)
+    raise TypeError(f"cannot build a ClientSampler from {spec!r}")

@@ -1,41 +1,36 @@
-"""Federated fine-tuning simulator (cross-silo and large-scale cross-device).
+"""DEPRECATED shim: the federated simulator is now
+:class:`repro.fed.api.FedSession`.
 
-Runs the paper's experimental protocol end-to-end on CPU with synthetic
-classification tasks: N clients with (optionally label-skewed) local shards,
-K local updates per round, FedAvg aggregation of the method's communicated
-subset, per-round eval + communication ledger.
+``run_federated(...)`` keeps the original 15-kwarg signature and forwards to
+a session so external callers don't break.  Kwarg mapping:
 
-This is the *simulation* path (python loop over clients, shared jit'd step).
-The *sharded* path -- clients mapped onto the mesh data axis inside one jit --
-lives in launch/fedrun.py and is what the dry-run lowers.
+  ======================  =============================================
+  old kwarg               FedSession knob
+  ======================  =============================================
+  (cfg.peft.method)       ``strategy=`` (registry name or instance)
+  client_fraction         ``sampler=FractionSampler(fraction)``
+  quantize_uplink=True    ``channel=[Int8DeltaChannel()]``
+  dp_eps/dp_delta/dp_clip ``local_dp=LocalDP(eps, delta, clip)``
+  (python loop)           ``backend="loop"`` (or ``"sharded"``)
+  ======================  =============================================
+
+Behavior note: when a client's shard is smaller than ``batch_size``, the old
+loop drew shard-sized batches (with replacement); the session draws uniform
+``batch_size`` batches with replacement so both backends see identically
+shaped data.  Runs whose shards all reach ``batch_size`` are unaffected.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
-import jax
-import jax.numpy as jnp
-import numpy as np
+import warnings
 
 from repro.configs.base import ModelConfig
-from repro.data.synthetic import ClassificationTask, label_skew_partition
-from repro.fed import dp as dp_lib
-from repro.fed.client import classify_loss, local_step_classify
-from repro.fed.comm import CommLog, uplink_kb
-from repro.fed.rounds import aggregate, count_true, trainable_mask
-from repro.models.transformer import classifier_init, forward_classify, model_init
-from repro.optim import adamw, apply_updates, masked_update
+from repro.data.synthetic import ClassificationTask
+from repro.fed.api import FedResult, FedSession, LocalDP
+from repro.fed.channel import Int8DeltaChannel
+from repro.fed.samplers import FractionSampler
 
-
-@dataclasses.dataclass
-class FedResult:
-    acc_history: list
-    comm: CommLog
-    n_trainable: int
-    n_communicated_round0: int
-    best_acc: float
+__all__ = ["FedResult", "run_federated"]
 
 
 def run_federated(cfg: ModelConfig, task: ClassificationTask, *,
@@ -47,99 +42,18 @@ def run_federated(cfg: ModelConfig, task: ClassificationTask, *,
                   dp_eps: float | None = None, dp_delta: float = 1e-5,
                   dp_clip: float = 2.0, quantize_uplink: bool = False,
                   seed: int = 0) -> FedResult:
-    """Returns accuracy history + communication ledger for one method
-    (cfg.peft.method decides FedTT / FedTT+ / LoRA / ...)."""
-    rng = np.random.default_rng(seed)
-    key = jax.random.key(seed)
-    kb, kc, ke = jax.random.split(key, 3)
-
-    params = model_init(kb, cfg)
-    backbone = params["backbone"]
-    global_trainable = {"peft": params["peft"],
-                        "classifier": classifier_init(kc, cfg, task.n_classes)}
-
-    optimizer = adamw(lr)
-
-    # --- data: one pool, label-skew partitioned across clients
-    pool = task.sample(n_clients * train_per_client, seed_offset=1)
-    labels_np = np.asarray(pool["labels"])
-    shards = label_skew_partition(labels_np, n_clients,
-                                  proportions=hetero_proportions,
-                                  alpha=hetero_alpha, seed=seed)
-    eval_batch = task.sample(eval_n, seed_offset=2)
-
-    @jax.jit
-    def eval_acc(trainable):
-        logits, _ = forward_classify({"backbone": backbone, "peft": trainable["peft"]},
-                                     cfg, eval_batch, trainable["classifier"],
-                                     task.n_classes)
-        return jnp.mean((jnp.argmax(logits, -1) == eval_batch["labels"]).astype(jnp.float32))
-
-    sigma = None
-    if dp_eps is not None:
-        q = batch_size / max(train_per_client, 1)
-        sigma = dp_lib.noise_multiplier(dp_eps, dp_delta, q, n_rounds * local_steps)
-
-    def dp_local_step(trainable, opt_state, batch, freeze_mask, step_key):
-        def per_ex_loss(tr, ex):
-            ex_b = jax.tree.map(lambda x: x[None], ex)
-            loss, _ = classify_loss(tr, backbone, cfg, ex_b, task.n_classes)
-            return loss
-        grads = dp_lib.dp_grads(per_ex_loss, trainable, batch, step_key,
-                                clip=dp_clip, sigma=sigma)
-        if freeze_mask is not None:
-            grads = masked_update(grads, freeze_mask)
-        updates, opt_state = optimizer.update(grads, opt_state, trainable)
-        return apply_updates(trainable, updates), opt_state
-    dp_local_step = jax.jit(dp_local_step)
-
-    comm = CommLog()
-    acc_history = []
-    n_trainable = count_true(trainable_mask(global_trainable, cfg, 0),
-                             global_trainable)
-    n_comm0 = None
-
-    opt_template = optimizer.init(global_trainable)
-
-    for t in range(n_rounds):
-        mask = trainable_mask(global_trainable, cfg, t)
-        n_sel = max(1, int(round(client_fraction * n_clients)))
-        selected = rng.choice(n_clients, size=n_sel, replace=False)
-
-        client_results = []
-        for ci in selected:
-            trainable = jax.tree.map(lambda x: x, global_trainable)
-            opt_state = opt_template
-            for k in range(local_steps):
-                idx = rng.choice(shards[ci], size=min(batch_size, len(shards[ci])),
-                                 replace=len(shards[ci]) < batch_size)
-                batch = jax.tree.map(lambda x: x[idx], pool)
-                if dp_eps is not None:
-                    sk = jax.random.fold_in(ke, t * 131 + int(ci) * 17 + k)
-                    trainable, opt_state = dp_local_step(
-                        trainable, opt_state, batch, mask, sk)
-                else:
-                    trainable, opt_state, _ = local_step_classify(
-                        trainable, opt_state, backbone, batch, mask,
-                        cfg=cfg, n_classes=task.n_classes, optimizer=optimizer)
-            client_results.append(trainable)
-
-        if quantize_uplink:
-            # clients send int8 deltas; server dequantizes and averages
-            from repro.fed import compress
-            payloads = [compress.quantize_delta(c, global_trainable)
-                        for c in client_results]
-            global_trainable = compress.apply_quantized_deltas(
-                global_trainable, payloads)
-            kb_round = compress.payload_bytes(global_trainable) / 1024
-        else:
-            global_trainable = aggregate(client_results, mask)
-            kb_round = count_true(mask, global_trainable) * 4 / 1024
-        comm.record(kb_round)
-        if n_comm0 is None:
-            n_comm0 = count_true(mask, global_trainable)
-        acc_history.append(float(eval_acc(global_trainable)))
-
-    return FedResult(acc_history=acc_history, comm=comm,
-                     n_trainable=n_trainable, n_communicated_round0=n_comm0,
-                     best_acc=max(acc_history))
+    """Deprecated: construct a :class:`repro.fed.api.FedSession` instead."""
+    warnings.warn("run_federated() is deprecated; use "
+                  "repro.fed.api.FedSession", DeprecationWarning,
+                  stacklevel=2)
+    return FedSession(
+        cfg, task,
+        sampler=(FractionSampler(client_fraction)
+                 if client_fraction < 1.0 else None),
+        channel=[Int8DeltaChannel()] if quantize_uplink else None,
+        local_dp=(LocalDP(dp_eps, dp_delta, dp_clip)
+                  if dp_eps is not None else None),
+        n_clients=n_clients, n_rounds=n_rounds, local_steps=local_steps,
+        batch_size=batch_size, lr=lr, train_per_client=train_per_client,
+        eval_n=eval_n, hetero_proportions=hetero_proportions,
+        hetero_alpha=hetero_alpha, seed=seed).run()

@@ -1,0 +1,327 @@
+"""Pluggable federated strategies behind a name registry.
+
+A :class:`Strategy` owns the two method-specific decisions of a federated
+round:
+
+  * **mask** -- which trainable leaves train *and are communicated* this
+    round (FedTT+ Alg. 2 factor cycling, FFA-LoRA's frozen A, RoLoRA's
+    alternation, ...);
+  * **aggregate** -- how the server merges client results (FedAvg over
+    factors, or heterorank's matrix-space average of reconstructed adapters).
+
+Strategies also control the client's starting view of the global state
+(:meth:`Strategy.client_view`), which is how heterogeneous-rank FedTT
+TT-rounds the down-link per client capability.
+
+This module absorbs the round logic that used to live in ``fed/rounds.py``
+(kept as a compat re-export shim) and the orchestration half of
+``fed/heterorank.py`` (whose TT-rounding math it reuses).
+
+FedTT+: in round t, for every tensorized layer with factors G_1..G_J, the
+trainable set is {G_1, G_r, G_J} with r = (t mod (J-2)) + 2  (r in {2..J-1});
+all other middle factors stay frozen and identical across clients, which
+makes FedAvg-of-factors equal FedAvg-of-products for the frozen chain
+segments (paper Eq. 2 -> Eq. 3).  The classifier (and biases) always train.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+def _mask_like(tree, value: bool):
+    return jax.tree.map(lambda _: value, tree)
+
+
+def fedtt_plus_factor_mask(n_factors: int, round_idx: int) -> list[bool]:
+    """Trainable mask over a J-factor chain for round t (Alg. 2 line 3)."""
+    j = n_factors
+    if j <= 3:
+        return [True] * j
+    r = (round_idx % (j - 2)) + 2          # r in {2, .., J-1}, 1-indexed
+    return [(i + 1) in (1, r, j) for i in range(j)]
+
+
+def aggregate(client_pefts: list[dict], mask: dict | None = None) -> dict:
+    """FedAvg over client pytrees (Alg. 1 line 8 / Alg. 2 line 10).
+
+    Frozen leaves are identical across clients by construction; averaging
+    them is a no-op, but with `mask` we take client 0's copy explicitly
+    (documenting that they are NOT communicated)."""
+    n = len(client_pefts)
+    avg = jax.tree.map(lambda *xs: sum(xs) / n, *client_pefts)
+    if mask is None:
+        return avg
+    return jax.tree.map(lambda a, first, m: a if m else first,
+                        avg, client_pefts[0], mask)
+
+
+def aggregate_stacked(stacked_peft: dict, mask: dict | None = None) -> dict:
+    """Sharded-mode FedAvg: peft leaves have a leading client axis (sharded
+    over the mesh `data` axis); the mean over axis 0 lowers to the FedTT
+    up-link all-reduce.  Returns the broadcast (stacked) result."""
+
+    def agg_leaf(x, m=True):
+        if not m:
+            return x
+        mean = jnp.mean(x, axis=0, keepdims=True)
+        return jnp.broadcast_to(mean, x.shape).astype(x.dtype)
+
+    if mask is None:
+        return jax.tree.map(agg_leaf, stacked_peft)
+    return jax.tree.map(lambda x, m: agg_leaf(x, m), stacked_peft, mask)
+
+
+def count_true(mask_tree, params_tree) -> int:
+    """Number of scalar params whose mask is True (communicated count)."""
+    total = 0
+    for m, p in zip(jax.tree.leaves(mask_tree), jax.tree.leaves(params_tree)):
+        if m:
+            total += int(np.prod(p.shape))
+    return total
+
+
+# ---------------------------------------------------------------------------
+# Strategy protocol + registry
+# ---------------------------------------------------------------------------
+
+class Strategy:
+    """One federated method: per-round trainable/communicated mask, the
+    client's starting view of the server state, and the server merge rule.
+
+    Trees are either the bare peft dict or the wrapper
+    ``{"peft": ..., "classifier": ...}``; the classifier (and any other
+    non-block leaves) always train and are always sent (Alg. 2 note)."""
+
+    name = "fedavg"
+    #: whether aggregate_stacked over a leading client axis is available
+    #: (pure-jnp mean -> one all-reduce on the mesh data axis)
+    supports_stacked = True
+
+    def __init__(self, cfg: ModelConfig | None = None):
+        self.cfg = cfg
+
+    # -- per-round trainable/communicated mask ------------------------------
+    def blocks_mask(self, blocks: dict, round_idx: int):
+        return _mask_like(blocks, True)
+
+    def mask(self, tree: dict, round_idx: int) -> dict:
+        """Bool pytree over `tree`: which leaves train (and are sent) this
+        round."""
+        mask = _mask_like(tree, True)
+        peft = tree["peft"] if "peft" in tree else tree
+        if "blocks" in peft:
+            bm = self.blocks_mask(peft["blocks"], round_idx)
+            if "peft" in tree:
+                mask["peft"] = dict(mask["peft"], blocks=bm)
+            else:
+                mask = dict(mask, blocks=bm)
+        return mask
+
+    # -- down-link: the client's starting view of the global state ----------
+    def client_view(self, global_trainable: dict, client_idx: int, *,
+                    uniform: bool = False):
+        """Returns (client starting tree, per-client ModelConfig or None).
+
+        ``uniform=True`` (sharded backend) requires every client view to
+        share the global tree's shapes so clients can be stacked."""
+        del client_idx, uniform
+        return global_trainable, None
+
+    # -- server aggregation -------------------------------------------------
+    def aggregate(self, client_trees: list[dict], mask: dict | None = None) -> dict:
+        return aggregate(client_trees, mask)
+
+    def aggregate_stacked(self, stacked: dict, mask: dict | None = None) -> dict:
+        return aggregate_stacked(stacked, mask)
+
+
+_REGISTRY: dict[str, type[Strategy]] = {}
+
+
+def register_strategy(*names: str):
+    """Class decorator: register a Strategy under one or more method names."""
+    def deco(cls):
+        for n in names:
+            _REGISTRY[n] = cls
+        return cls
+    return deco
+
+
+def available_strategies() -> tuple[str, ...]:
+    return tuple(sorted(_REGISTRY))
+
+
+def get_strategy(spec, cfg: ModelConfig | None = None) -> Strategy:
+    """Resolve a Strategy from an instance or a registered name."""
+    if isinstance(spec, Strategy):
+        return spec
+    if spec not in _REGISTRY:
+        raise KeyError(f"unknown strategy {spec!r}; "
+                       f"registered: {available_strategies()}")
+    return _REGISTRY[spec](cfg)
+
+
+def strategy_for(cfg: ModelConfig) -> Strategy:
+    """The strategy matching ``cfg.peft.method``."""
+    return get_strategy(cfg.peft.method, cfg)
+
+
+def trainable_mask(tree: dict, cfg: ModelConfig, round_idx: int) -> dict:
+    """Compat entry point (old ``fed.rounds.trainable_mask`` signature)."""
+    return strategy_for(cfg).mask(tree, round_idx)
+
+
+# ---------------------------------------------------------------------------
+# Implementations
+# ---------------------------------------------------------------------------
+
+@register_strategy("fedavg", "fedtt", "lora", "bitfit", "adapter", "prompt",
+                   "none")
+class FedAvgStrategy(Strategy):
+    """Plain FedAvg of the full trainable set (FedTT Alg. 1, LoRA, BitFit,
+    Houlsby adapters, prompt tuning)."""
+    name = "fedavg"
+
+
+@register_strategy("fedtt_plus")
+class FedTTPlusStrategy(Strategy):
+    """FedTT+ (Alg. 2): only {G_1, G_r, G_J} of each factor chain train/are
+    sent; r cycles over the middle factors once per J-2 rounds."""
+    name = "fedtt_plus"
+
+    def blocks_mask(self, blocks: dict, round_idx: int):
+        def adapter_mask(ad):
+            return {side: fedtt_plus_factor_mask(len(ad[side]), round_idx)
+                    for side in ("down", "up")}
+        return {hook: adapter_mask(blocks[hook]) for hook in blocks}
+
+
+@register_strategy("ffa_lora")
+class FFALoRAStrategy(Strategy):
+    """FFA-LoRA: A frozen forever, only B trains/is sent."""
+    name = "ffa_lora"
+
+    def blocks_mask(self, blocks: dict, round_idx: int):
+        del round_idx
+        return {h: {"A": False, "B": True} for h in blocks}
+
+
+@register_strategy("rolora")
+class RoLoRAStrategy(Strategy):
+    """RoLoRA: A trains on even rounds, B on odd rounds."""
+    name = "rolora"
+
+    def blocks_mask(self, blocks: dict, round_idx: int):
+        train_a = (round_idx % 2 == 0)
+        return {h: {"A": train_a, "B": not train_a} for h in blocks}
+
+
+@register_strategy("heterorank")
+class HeteroRankStrategy(Strategy):
+    """Heterogeneous-rank FedTT (the paper's Limitations future work).
+
+    The server keeps rank-r_max adapters; the down-link TT-rounds them to
+    each client's capability rank, clients train at their own rank, and the
+    server aggregates in MATRIX space (reconstruct -> average -> TT-SVD back
+    to r_max) -- interference-free by construction (paper Eq. 2 RHS).
+
+    Under ``uniform=True`` (sharded backend) the rounded rank-r_c adapter is
+    re-embedded at the server rank via TT-SVD (exact: padding ranks up is
+    lossless), so all client views share the server shapes and stack."""
+    name = "heterorank"
+    supports_stacked = False
+
+    def __init__(self, cfg: ModelConfig | None = None,
+                 ranks: tuple[int, ...] = (2, 5, 10)):
+        if cfg is None:
+            raise ValueError("HeteroRankStrategy needs the server ModelConfig "
+                             "(its peft.tt_rank is the server rank)")
+        super().__init__(cfg)
+        self.ranks = tuple(ranks)
+
+    def client_rank(self, client_idx: int) -> int:
+        return self.ranks[int(client_idx) % len(self.ranks)]
+
+    def _spec(self):
+        from repro.models.peft_glue import adapter_spec
+        return adapter_spec(self.cfg)
+
+    def client_view(self, global_trainable: dict, client_idx: int, *,
+                    uniform: bool = False):
+        from repro.core.tt import tt_reconstruct, tt_svd
+        from repro.fed.heterorank import round_adapter
+
+        spec = self._spec()
+        r = self.client_rank(client_idx)
+        new_blocks = {}
+        for hook, sides in global_trainable["peft"]["blocks"].items():
+            n_layers = sides["down"][0].shape[0]
+            per_layer = []
+            for li in range(n_layers):
+                ad = {s: [f[li] for f in sides[s]] for s in ("down", "up")}
+                rounded = round_adapter(ad, spec, r)
+                if uniform:
+                    rounded = {
+                        s: tt_svd(tt_reconstruct(rounded[s], side_spec),
+                                  side_spec)
+                        for s, side_spec in (("down", spec.down),
+                                             ("up", spec.up))}
+                per_layer.append(rounded)
+            new_blocks[hook] = {
+                s: [jnp.stack([per_layer[li][s][j] for li in range(n_layers)])
+                    for j in range(len(per_layer[0][s]))]
+                for s in ("down", "up")}
+        view = dict(global_trainable,
+                    peft=dict(global_trainable["peft"], blocks=new_blocks))
+        if uniform:
+            return view, None
+        ccfg = dataclasses.replace(
+            self.cfg, peft=dataclasses.replace(self.cfg.peft, tt_rank=r))
+        return view, ccfg
+
+    def aggregate(self, client_trees: list[dict], mask: dict | None = None) -> dict:
+        """Matrix-space aggregation of the adapter blocks (ranks may differ
+        per client); plain FedAvg of everything else (classifier, ...)."""
+        del mask   # blocks are fully re-decomposed; the rest fully averages
+        from repro.core.tt import tt_reconstruct, tt_svd
+
+        n = len(client_trees)
+        spec = self._spec()
+        blocks_list = [t["peft"]["blocks"] for t in client_trees]
+        out_blocks = {}
+        for hook in blocks_list[0]:
+            sides = {}
+            for s, side_spec in (("down", spec.down), ("up", spec.up)):
+                n_layers = blocks_list[0][hook][s][0].shape[0]
+                layers = []
+                for li in range(n_layers):
+                    acc = None
+                    for cb in blocks_list:
+                        w = tt_reconstruct([f[li] for f in cb[hook][s]],
+                                           side_spec) / n
+                        acc = w if acc is None else acc + w
+                    layers.append(tt_svd(acc, side_spec))
+                sides[s] = [jnp.stack([layers[li][j]
+                                       for li in range(n_layers)])
+                            for j in range(len(layers[0]))]
+            out_blocks[hook] = sides
+
+        def strip(t):
+            return dict(t, peft={k: v for k, v in t["peft"].items()
+                                 if k != "blocks"})
+        rest = aggregate([strip(t) for t in client_trees])
+        return dict(rest, peft=dict(rest["peft"], blocks=out_blocks))
+
+    def aggregate_stacked(self, stacked: dict, mask: dict | None = None) -> dict:
+        n = jax.tree.leaves(stacked)[0].shape[0]
+        clients = [jax.tree.map(lambda x, i=i: x[i], stacked) for i in range(n)]
+        agg = self.aggregate(clients, mask)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (n,) + a.shape), agg)

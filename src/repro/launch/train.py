@@ -75,12 +75,15 @@ def run_centralized(args) -> float:
 
 def run_federated_mode(args) -> float:
     from repro.configs.paper_models import TINY_ENCODER
-    from repro.fed.simulate import run_federated
+    from repro.fed.api import FedSession
     cfg = dataclasses.replace(TINY_ENCODER, peft=PEFTConfig(method=args.method))
     task = ClassificationTask(n_classes=2, vocab=256, seq_len=16, seed=args.seed)
-    res = run_federated(cfg, task, n_clients=args.clients, n_rounds=args.rounds,
-                        local_steps=args.local_steps, lr=args.lr, seed=args.seed)
-    print(f"[fed] method={args.method} best_acc={res.best_acc:.3f} "
+    res = FedSession(cfg, task, backend=args.fed_backend,
+                     sampler=args.client_fraction, n_clients=args.clients,
+                     n_rounds=args.rounds, local_steps=args.local_steps,
+                     lr=args.lr, seed=args.seed).run()
+    print(f"[fed] method={args.method} backend={args.fed_backend} "
+          f"best_acc={res.best_acc:.3f} "
           f"uplink_total={res.comm.total_kb:.0f}KB "
           f"trainable={res.n_trainable}")
     return res.best_acc
@@ -101,6 +104,9 @@ def main(argv=None):
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--local-steps", type=int, default=2)
+    ap.add_argument("--fed-backend", choices=["loop", "sharded"],
+                    default="loop")
+    ap.add_argument("--client-fraction", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)
     args = ap.parse_args(argv)

@@ -1,0 +1,38 @@
+"""Soft dependency on ``hypothesis``: import ``given``/``settings``/``st``
+from here instead of from hypothesis directly.
+
+When hypothesis is installed (see requirements-dev.txt) the real decorators
+are re-exported and property tests run as usual.  When it is missing, the
+module no longer aborts collection with ModuleNotFoundError (which used to
+kill the whole tier-1 run): property tests degrade to skipped placeholders
+while every plain test in the same module still runs."""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st   # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """st.integers(...), st.floats(...), ... -> inert placeholders."""
+
+        def __getattr__(self, _name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def settings(*_a, **_k):
+        return lambda fn: fn
+
+    def given(*_a, **_k):
+        def deco(fn):
+            @pytest.mark.skip(reason="hypothesis not installed "
+                                     "(pip install -r requirements-dev.txt)")
+            def _skipped():
+                pass
+            _skipped.__name__ = fn.__name__
+            _skipped.__doc__ = fn.__doc__
+            return _skipped
+        return deco

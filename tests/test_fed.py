@@ -7,16 +7,16 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.configs.base import PEFTConfig
 from repro.configs.paper_models import TINY_ENCODER
 from repro.data.synthetic import ClassificationTask, label_skew_partition
 from repro.fed import dp as dp_lib
+from repro.fed.api import FedSession
 from repro.fed.comm import uplink_kb
-from repro.fed.rounds import (aggregate, aggregate_stacked, count_true,
-                              trainable_mask)
-from repro.fed.simulate import run_federated
+from repro.fed.strategies import (aggregate, aggregate_stacked, count_true,
+                                  trainable_mask)
 
 TASK = ClassificationTask(n_classes=2, vocab=256, seq_len=32, seed=0, signal=0.5)
 
@@ -141,7 +141,7 @@ def test_noise_multiplier_scales():
 @pytest.mark.slow
 def test_fedtt_learns_separable_task():
     cfg = _cfg("fedtt")
-    res = run_federated(cfg, TASK, n_clients=3, n_rounds=12, local_steps=4,
-                        batch_size=32, train_per_client=128, eval_n=128,
-                        lr=1e-2, seed=0)
+    res = FedSession(cfg, TASK, n_clients=3, n_rounds=12, local_steps=4,
+                     batch_size=32, train_per_client=128, eval_n=128,
+                     lr=1e-2, seed=0).run()
     assert res.best_acc > 0.8, res.acc_history

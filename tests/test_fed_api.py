@@ -1,0 +1,263 @@
+"""FedSession orchestration API: strategy registry semantics, stacked/listwise
+aggregation equivalence, channel wire-bytes accounting, samplers, backend
+parity, and the run_federated deprecation shim."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import PEFTConfig
+from repro.configs.paper_models import TINY_ENCODER
+from repro.data.synthetic import ClassificationTask
+from repro.fed.api import FedSession, LocalDP
+from repro.fed.channel import (ChannelStack, DPGaussianChannel, IdentityFP32,
+                               Int8DeltaChannel)
+from repro.fed.samplers import (FractionSampler, FullParticipation,
+                                ImportanceSampler, get_sampler)
+from repro.fed.simulate import run_federated
+from repro.fed.strategies import (HeteroRankStrategy, available_strategies,
+                                  count_true, fedtt_plus_factor_mask,
+                                  get_strategy, strategy_for)
+from repro.models.transformer import classifier_init, model_init
+
+TASK = ClassificationTask(n_classes=2, vocab=256, seq_len=16, seed=0, signal=0.5)
+
+SMALL = dict(n_clients=3, n_rounds=2, local_steps=2, batch_size=8,
+             train_per_client=32, eval_n=32, lr=1e-2, seed=0)
+
+
+def _cfg(method, **kw):
+    return dataclasses.replace(TINY_ENCODER, peft=PEFTConfig(method=method, **kw))
+
+
+def _trainable(cfg, seed=0):
+    params = model_init(jax.random.key(seed), cfg)
+    return {"peft": params["peft"],
+            "classifier": classifier_init(jax.random.key(seed + 1), cfg, 2)}
+
+
+# ---------------------------------------------------------------------------
+# Strategy registry
+# ---------------------------------------------------------------------------
+
+def test_registry_has_paper_methods():
+    for name in ("fedtt", "fedtt_plus", "lora", "ffa_lora", "rolora",
+                 "heterorank"):
+        assert name in available_strategies()
+    with pytest.raises(KeyError):
+        get_strategy("no_such_method")
+
+
+def test_strategy_for_uses_cfg_method():
+    assert strategy_for(_cfg("fedtt_plus")).name == "fedtt_plus"
+    assert strategy_for(_cfg("fedtt")).name == "fedavg"
+
+
+def test_fedtt_plus_mask_cycles_every_middle_factor_once():
+    """Alg. 2 under the registry: the middle trainable factor must cycle over
+    every index in {2..J-1} exactly once per J-2 rounds."""
+    strat = get_strategy("fedtt_plus")
+    tree = _trainable(_cfg("fedtt_plus"))
+    chain_len = len(tree["peft"]["blocks"]["adapter_attn"]["down"])
+    if chain_len <= 3:   # cycling only kicks in for J > 3; check directly too
+        j = 6
+    else:
+        j = chain_len
+    period = j - 2
+    middles = []
+    for t in range(2 * period):
+        mask = fedtt_plus_factor_mask(j, t)
+        assert mask[0] and mask[-1] and sum(mask) == 3
+        middles.append([i for i in range(1, j - 1) if mask[i]][0] + 1)
+    # each middle factor exactly once per period, twice over 2 periods
+    assert sorted(middles) == sorted(list(range(2, j)) * 2)
+    if chain_len > 3:
+        m0 = strat.mask(tree, 0)
+        m1 = strat.mask(tree, 1)
+        assert (m0["peft"]["blocks"]["adapter_attn"]["down"]
+                != m1["peft"]["blocks"]["adapter_attn"]["down"])
+
+
+@pytest.mark.parametrize("method", ["fedtt", "fedtt_plus", "ffa_lora",
+                                    "rolora"])
+def test_aggregate_stacked_matches_listwise_masked(method):
+    """Strategy equivalence: aggregate_stacked (masked) must match aggregate
+    (masked) leaf-for-leaf on the same client trees."""
+    cfg = _cfg(method)
+    strat = strategy_for(cfg)
+    base = _trainable(cfg)
+    clients = [jax.tree.map(
+        lambda x, i=i: x + 0.1 * jax.random.normal(
+            jax.random.fold_in(jax.random.key(7 + i), 0), x.shape), base)
+        for i in range(4)]
+    mask = strat.mask(base, round_idx=1)
+
+    listwise = strat.aggregate(clients, mask)
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *clients)
+    agg_stacked = strat.aggregate_stacked(stacked, mask)
+    for a, b, m in zip(jax.tree.leaves(listwise),
+                       jax.tree.leaves(agg_stacked),
+                       jax.tree.leaves(mask)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b[0]),
+                                   rtol=1e-6, atol=1e-7,
+                                   err_msg=f"mask={m}")
+        if m:   # averaged leaves must be broadcast identically to all rows
+            np.testing.assert_allclose(np.asarray(b[1]), np.asarray(b[0]))
+
+
+# ---------------------------------------------------------------------------
+# Channel middleware
+# ---------------------------------------------------------------------------
+
+def test_int8_channel_wire_bytes_are_int8_not_fp32():
+    """The ledger regression run_federated had: quantized up-link must count
+    the int8 delta payload (1 B/param + 4 B/tensor scale), not fp32 bytes."""
+    tree = {"a": jnp.ones((100,)), "b": jnp.ones((10, 10))}
+    mask = {"a": True, "b": True}
+    fp32 = IdentityFP32().wire_bytes(tree, mask)
+    int8 = Int8DeltaChannel().wire_bytes(tree, mask)
+    assert fp32 == 4 * 200
+    assert int8 == 200 + 2 * 4
+    # frozen leaves are not transmitted
+    assert Int8DeltaChannel().wire_bytes(tree, {"a": True, "b": False}) == 104
+
+
+def test_channel_stack_reports_last_encoder():
+    tree = {"a": jnp.ones((100,))}
+    mask = {"a": True}
+    stack = ChannelStack([IdentityFP32(), Int8DeltaChannel()])
+    wire, per_stage = stack.account(tree, mask)
+    assert wire == per_stage["int8"] == 104
+    assert per_stage["fp32"] == 400
+    assert not stack.transparent
+    # a noise-only stack falls back to fp32 accounting
+    noisy = ChannelStack([DPGaussianChannel(clip=1.0, sigma=0.5)])
+    wire, per_stage = noisy.account(tree, mask)
+    assert wire == per_stage["fp32"] == 400
+
+
+def test_int8_roundtrip_small_error_and_dp_noise_changes_values():
+    delta = {"w": 0.1 * jax.random.normal(jax.random.key(0), (64,))}
+    mask = {"w": True}
+    out, wire, _ = ChannelStack([Int8DeltaChannel()]).uplink(delta, mask)
+    err = float(jnp.max(jnp.abs(out["w"] - delta["w"])))
+    assert err <= float(jnp.max(jnp.abs(delta["w"]))) / 127 + 1e-6
+    assert wire == 64 + 4
+    noised, _, _ = ChannelStack(
+        [DPGaussianChannel(clip=10.0, sigma=0.5)]).uplink(delta, mask)
+    assert float(jnp.max(jnp.abs(noised["w"] - delta["w"]))) > 1e-4
+
+
+def test_session_ledger_uses_channel_wire_bytes():
+    cfg = _cfg("fedtt")
+    kw = dict(SMALL, n_rounds=1)
+    res_fp = FedSession(cfg, TASK, **kw).run()
+    res_q = FedSession(cfg, TASK, channel=[Int8DeltaChannel()], **kw).run()
+    # int8 payload must be ~4x smaller than fp32, not equal to it
+    assert res_q.comm.total_kb < 0.3 * res_fp.comm.total_kb
+    assert "int8" in res_q.comm.stage_kb and "fp32" in res_fp.comm.stage_kb
+
+
+# ---------------------------------------------------------------------------
+# Samplers
+# ---------------------------------------------------------------------------
+
+def test_samplers_select_expected_counts():
+    rng = np.random.default_rng(0)
+    assert list(FullParticipation().select(0, 5, rng)) == [0, 1, 2, 3, 4]
+    sel = FractionSampler(0.25).select(0, 40, rng)
+    assert len(sel) == 10 and len(set(sel.tolist())) == 10
+    imp = ImportanceSampler(0.5, weights=[0.0, 0.0, 1.0, 1.0])
+    sel = imp.select(0, 4, rng)
+    assert set(sel.tolist()) <= {2, 3}
+    assert isinstance(get_sampler(0.5), FractionSampler)
+    assert isinstance(get_sampler(None), FullParticipation)
+    assert isinstance(get_sampler(1.0), FullParticipation)
+
+
+# ---------------------------------------------------------------------------
+# Backends: every registered strategy through the same FedSession API
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("method", ["fedtt", "fedtt_plus", "lora", "ffa_lora",
+                                    "rolora"])
+@pytest.mark.parametrize("backend", ["loop", "sharded"])
+def test_both_backends_run_every_strategy(method, backend):
+    res = FedSession(_cfg(method), TASK, backend=backend, n_clients=2,
+                     n_rounds=1, local_steps=1, batch_size=8,
+                     train_per_client=16, eval_n=16, lr=1e-2).run()
+    assert np.isfinite(res.acc_history).all()
+    assert res.comm.total_kb > 0
+    assert res.n_trainable >= res.n_communicated_round0 > 0
+
+
+@pytest.mark.parametrize("backend", ["loop", "sharded"])
+def test_heterorank_strategy_both_backends(backend):
+    scfg = _cfg("fedtt", tt_rank=5)
+    strat = HeteroRankStrategy(scfg, ranks=(2, 3, 5))
+    res = FedSession(scfg, TASK, strategy=strat, backend=backend, n_clients=3,
+                     n_rounds=1, local_steps=1, batch_size=8,
+                     train_per_client=16, eval_n=16, lr=1e-2).run()
+    assert np.isfinite(res.acc_history).all()
+    # server tree stays at the server rank
+    f0 = res.trainable["peft"]["blocks"]["adapter_attn"]["down"][0]
+    assert f0.shape[-1] == 5
+
+
+def test_heterorank_loop_uplink_shrinks_with_client_rank():
+    scfg = _cfg("fedtt", tt_rank=5)
+    lo = FedSession(scfg, TASK, strategy=HeteroRankStrategy(scfg, ranks=(2,)),
+                    n_clients=2, n_rounds=1, local_steps=1, batch_size=8,
+                    train_per_client=16, eval_n=16, lr=1e-2).run()
+    hi = FedSession(scfg, TASK, strategy=HeteroRankStrategy(scfg, ranks=(5,)),
+                    n_clients=2, n_rounds=1, local_steps=1, batch_size=8,
+                    train_per_client=16, eval_n=16, lr=1e-2).run()
+    assert lo.comm.total_kb < hi.comm.total_kb
+
+
+@pytest.mark.parametrize("method", ["fedtt", "fedtt_plus"])
+def test_backend_parity_loop_vs_sharded(method):
+    """Acceptance: python-loop and sharded backends agree on the aggregated
+    trainable pytree (same strategy, same data plan) within fp tolerance."""
+    cfg = _cfg(method)
+    res_loop = FedSession(cfg, TASK, backend="loop", **SMALL).run()
+    res_shard = FedSession(cfg, TASK, backend="sharded", **SMALL).run()
+    for a, b in zip(jax.tree.leaves(res_loop.trainable),
+                    jax.tree.leaves(res_shard.trainable)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-4)
+    np.testing.assert_allclose(res_loop.comm.total_kb,
+                               res_shard.comm.total_kb)
+
+
+def test_sharded_backend_rejects_dp_sgd():
+    with pytest.raises(ValueError, match="loop"):
+        FedSession(_cfg("fedtt"), TASK, backend="sharded",
+                   local_dp=LocalDP(3.0), n_clients=2, n_rounds=1,
+                   local_steps=1, batch_size=8, train_per_client=16,
+                   eval_n=16).run()
+
+
+# ---------------------------------------------------------------------------
+# Legacy shim
+# ---------------------------------------------------------------------------
+
+def test_run_federated_shim_forwards_and_warns():
+    with pytest.deprecated_call():
+        res = run_federated(_cfg("fedtt"), TASK, n_clients=2, n_rounds=1,
+                            local_steps=1, batch_size=8, train_per_client=16,
+                            eval_n=16, lr=1e-2, quantize_uplink=True)
+    assert np.isfinite(res.acc_history).all()
+    assert "int8" in res.comm.stage_kb
+
+
+def test_mask_counts_match_legacy_semantics():
+    cfg = _cfg("fedtt_plus")
+    tree = _trainable(cfg)
+    strat = strategy_for(cfg)
+    n_plus = count_true(strat.mask(tree, 0), tree)
+    n_full = count_true(strategy_for(_cfg("fedtt")).mask(tree, 0), tree)
+    assert 0 < n_plus < n_full

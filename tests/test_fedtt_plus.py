@@ -5,10 +5,10 @@ identical across clients, in which case equality is exact."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.tt import TTSpec, tt_init, tt_reconstruct
-from repro.fed.rounds import fedtt_plus_factor_mask
+from repro.fed.strategies import fedtt_plus_factor_mask
 
 SPEC = TTSpec(16, 16, (4, 4, 4, 4), 2, 3)
 

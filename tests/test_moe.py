@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.configs.base import get_config
 from repro.models.moe import _moe_local, _moe_local_tp, _route, moe_apply

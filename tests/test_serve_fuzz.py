@@ -2,7 +2,7 @@
 exactly the requested generation lengths, regardless of slot contention."""
 
 import jax
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.configs.base import get_config
 from repro.models.transformer import model_init

@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_shim import given, settings, st
 
 from repro.core.tt import (PAPER_TT_SHAPES, TTSpec, factorize_balanced,
                            make_tt_spec, tt_init, tt_matvec, tt_reconstruct,
