@@ -1,19 +1,37 @@
-"""Kernel micro-benchmark: TT contraction vs dense matvec.
+"""Kernel micro-benchmark: TT contraction vs dense matvec, fwd AND bwd.
 
-Reports (i) wall us_per_call on CPU (interpret-mode Pallas vs jnp reference vs
-dense matmul -- CPU numbers are NOT TPU predictions, the derived FLOP/byte
-ratios are the portable quantity), (ii) the analytic FLOP and parameter-byte
-ratios that make the TT adapter cheap (paper §3.2).
+Reports (i) wall us_per_call for the forward pass, the backward pass (a
+jitted, pre-linearized VJP application -- for the Pallas op this times the
+fused chain-transpose backward kernel, in-kernel rematerialization included),
+and the combined fwd+bwd grad step, for three implementations: the Pallas
+kernels (``repro.kernels.ops``), the pure-jnp reference (``ref.py``), and a
+dense GEMM baseline; (ii) the analytic FLOP and parameter-byte ratios that
+make the TT adapter cheap (paper §3.2).
+
+CPU wall numbers are NOT TPU predictions (Pallas runs interpret=True off-TPU
+and is orders of magnitude slower than compiled; the jnp-vs-dense ratios and
+the analytic ratios are the portable quantities).  Results are persisted to
+``BENCH_kernel.json`` -- the perf-trajectory file EXPERIMENTS.md §Perf is
+rendered from (``python scripts/render_experiments.py kernel``).
+
+    PYTHONPATH=src python benchmarks/bench_kernel.py [--smoke] [--out PATH]
 """
 
 from __future__ import annotations
 
+import argparse
+
 import jax
 import jax.numpy as jnp
 
-from benchmarks.common import row, timer
+if __package__ in (None, ""):                 # `python benchmarks/bench_kernel.py`
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import row, time_us, write_bench_json
 from repro.core.tt import make_tt_spec, tt_init, tt_matvec
-from repro.kernels.ops import tt_linear
+from repro.kernels.ops import select_block_b, tt_linear
 
 
 def _flops_tt(spec, batch):
@@ -31,40 +49,91 @@ def _flops_tt(spec, batch):
     return total
 
 
-def run(batch: int = 4096, reps: int = 5) -> list[str]:
-    rows = []
-    for (p, q) in [(768, 64), (4096, 64)]:
-        spec = make_tt_spec(p, q, 5)
-        fs = tuple(tt_init(jax.random.key(0), spec, zero_last=False))
-        x = jax.random.normal(jax.random.key(1), (batch, p))
-        w = jax.random.normal(jax.random.key(2), (p, q)) / jnp.sqrt(p)
+def _impls(spec, fs, w):
+    """name -> (f(x, params), params) for the three implementations."""
+    return {
+        "pallas": (lambda x, p: tt_linear(x, p, spec), fs),
+        "jnp": (lambda x, p: tt_matvec(p, spec, x), fs),
+        "dense": (lambda x, p: x @ p, w),
+    }
 
-        jf = jax.jit(lambda x: tt_matvec(fs, spec, x))
-        jd = jax.jit(lambda x: x @ w)
-        jk = jax.jit(lambda x: tt_linear(x, fs, spec))
-        for f in (jf, jd, jk):
-            f(x).block_until_ready()
 
-        with timer() as t_tt:
-            for _ in range(reps):
-                jf(x).block_until_ready()
-        with timer() as t_d:
-            for _ in range(reps):
-                jd(x).block_until_ready()
-        with timer() as t_k:
-            for _ in range(reps):
-                jk(x).block_until_ready()
+def _bench_shape(p, q, batch, reps, results):
+    spec = make_tt_spec(p, q, 5)
+    fs = tuple(tt_init(jax.random.key(0), spec, zero_last=False))
+    x = jax.random.normal(jax.random.key(1), (batch, p))
+    g = jax.random.normal(jax.random.key(2), (batch, q))
+    w = jax.random.normal(jax.random.key(3), (p, q)) / jnp.sqrt(p)
 
-        fl_tt = _flops_tt(spec, batch)
-        fl_d = 2 * batch * p * q
-        rows.append(row(f"kernel_tt_contract[{p}x{q}][jnp]", t_tt.us / reps,
-                        f"flops_ratio_dense/tt={fl_d/fl_tt:.2f}"))
-        rows.append(row(f"kernel_tt_contract[{p}x{q}][dense]", t_d.us / reps,
-                        f"param_bytes_ratio={spec.dense_params/spec.n_params:.0f}x"))
-        rows.append(row(f"kernel_tt_contract[{p}x{q}][pallas-interp]",
-                        t_k.us / reps, "oracle-validated"))
-    return rows
+    fl_tt = _flops_tt(spec, batch)
+    fl_d = 2 * batch * p * q
+    derived = {"flops_dense_over_tt": fl_d / fl_tt,
+               "param_bytes_ratio": spec.dense_params / spec.n_params,
+               "block_b": select_block_b(spec)}
+
+    for impl, (fwd, params) in _impls(spec, fs, w).items():
+        j_fwd = jax.jit(fwd)
+        # backward only: pre-linearize, jit the VJP application (cotangents
+        # for x AND params, as in adapter training).  For the Pallas op this
+        # is exactly the fused chain-transpose backward kernel, which
+        # rematerializes the chain in VMEM from the (x, factors) residuals.
+        _, vjp = jax.vjp(fwd, x, params)
+        j_bwd = jax.jit(vjp)
+        # value_and_grad keeps the primal a live output -- with grad alone
+        # XLA dead-code-eliminates the forward for impls whose VJP does not
+        # consume it (custom_vjp residuals are (x, params); dense likewise),
+        # and "fwd+bwd" would silently time backward only.
+        j_fb = jax.jit(lambda xx, pp, gg, f=fwd: jax.value_and_grad(
+            lambda x2, p2: jnp.sum(f(x2, p2) * gg), argnums=(0, 1))(xx, pp))
+        timings = {}
+        for pass_name, fn in [("fwd", lambda: j_fwd(x, params)),
+                              ("bwd", lambda: j_bwd(g)),
+                              ("fwd_bwd", lambda: j_fb(x, params, g))]:
+            jax.block_until_ready(fn())          # warm / compile
+            us = time_us(fn, reps)
+            timings[pass_name] = us
+            row(f"kernel_tt[{p}x{q}][{impl}][{pass_name}]", us,
+                f"block_b={derived['block_b']}" if impl == "pallas"
+                else f"flops_ratio_dense/tt={fl_d/fl_tt:.2f}")
+        results.append({"shape": f"{p}x{q}", "impl": impl, "batch": batch,
+                        "us": timings, **derived})
+
+
+def run(batch: int | None = None, reps: int | None = None,
+        smoke: bool = False,
+        out_json: str | None = None) -> list[dict]:
+    # None means "not requested": --smoke shrinks only unset values, so an
+    # explicit --batch/--reps always wins over --smoke.  Smoke runs default
+    # to a separate output path so they never clobber the committed
+    # batch=4096 perf-trajectory file.
+    if batch is None:
+        batch = 512 if smoke else 4096
+    if reps is None:
+        reps = 2 if smoke else 5
+    if out_json is None:
+        out_json = "BENCH_kernel.smoke.json" if smoke else "BENCH_kernel.json"
+    shapes = [(768, 64)] if smoke else [(768, 64), (4096, 64)]
+    results: list[dict] = []
+    for (p, q) in shapes:
+        _bench_shape(p, q, batch, reps, results)
+    payload = {"meta": {"batch": batch, "reps": reps, "smoke": smoke,
+                        "backend": jax.default_backend(),
+                        "pallas_interpret": jax.default_backend() != "tpu"},
+               "results": results}
+    write_bench_json(out_json, payload)
+    return results
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small batch / single shape (CI bench-smoke job)")
+    ap.add_argument("--batch", type=int, default=None,
+                    help="default 4096 (512 with --smoke)")
+    ap.add_argument("--reps", type=int, default=None,
+                    help="default 5 (2 with --smoke)")
+    ap.add_argument("--out", default=None,
+                    help="default BENCH_kernel.json "
+                         "(BENCH_kernel.smoke.json with --smoke)")
+    a = ap.parse_args()
+    run(batch=a.batch, reps=a.reps, smoke=a.smoke, out_json=a.out)

@@ -50,3 +50,27 @@ class timer:
     @property
     def us(self) -> float:
         return self.dt * 1e6
+
+
+def time_us(fn, reps: int) -> float:
+    """Mean wall us_per_call of an already-warmed jitted callable (any
+    pytree-valued output)."""
+    import jax
+
+    with timer() as t:
+        for _ in range(reps):
+            jax.block_until_ready(fn())
+    return t.us / reps
+
+
+def write_bench_json(path: str, payload: dict) -> str:
+    """Persist a benchmark result dict as the BENCH_*.json perf trajectory
+    (EXPERIMENTS.md §Perf tables are rendered from these via
+    scripts/render_experiments.py)."""
+    import json
+
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"# wrote {path}")
+    return path

@@ -1,4 +1,9 @@
-"""Render results/*.json into the EXPERIMENTS.md roofline tables."""
+"""Render benchmark JSON (results/*.json, BENCH_*.json) into the
+EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python scripts/render_experiments.py kernel   # §Perf kernel table
+    PYTHONPATH=src python scripts/render_experiments.py all      # roofline + hillclimb
+"""
 
 import json
 import sys
@@ -43,8 +48,35 @@ def hillclimb_table(path):
     return "\n".join(lines)
 
 
+def kernel_table(path="BENCH_kernel.json"):
+    """The EXPERIMENTS.md §Perf kernel table (fwd / bwd / fwd+bwd per impl)."""
+    with open(path) as f:
+        data = json.load(f)
+    meta = data["meta"]
+    lines = [f"Measured on backend=`{meta['backend']}` "
+             f"(pallas interpret={meta['pallas_interpret']}), "
+             f"batch={meta['batch']}, reps={meta['reps']}.",
+             "",
+             "| shape | impl | block_b | fwd ms | bwd ms | fwd+bwd ms | "
+             "FLOPs dense/TT | param bytes dense/TT |",
+             "|---|---|---|---|---|---|---|---|"]
+    for r in data["results"]:
+        us = r["us"]
+        block = r["block_b"] if r["impl"] == "pallas" else "—"
+        lines.append(
+            f"| {r['shape']} | {r['impl']} | {block} | "
+            f"{us['fwd']/1e3:.2f} | {us['bwd']/1e3:.2f} | "
+            f"{us['fwd_bwd']/1e3:.2f} | {r['flops_dense_over_tt']:.2f}x | "
+            f"{r['param_bytes_ratio']:.0f}x |")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which == "kernel":
+        print(kernel_table(sys.argv[2] if len(sys.argv) > 2
+                           else "BENCH_kernel.json"))
+        sys.exit(0)
     if which in ("all", "sp"):
         print("### Single-pod (16x16)\n")
         print(table("results/dryrun_single_pod.json", 256))

@@ -11,10 +11,10 @@ Implemented methods and what each trains / communicates per round:
   adapter   -- dense bottleneck adapter (Houlsby et al. 2019).
   prompt    -- Prompt tuning (Lester et al. 2021): learnable soft tokens.
   fedtt     -- tensorized adapters (this paper) -- see core/adapters.py.
-  fedtt_plus-- fedtt + adaptive factor freezing -- see fed/rounds.py.
+  fedtt_plus-- fedtt + adaptive factor freezing -- see fed/strategies.py.
 
 All are functional: *_init returns a params pytree, *_apply consumes it.
-``trainable_mask(method, params, round)`` (in fed/rounds.py) decides which
+``trainable_mask(method, params, round)`` (in fed/strategies.py) decides which
 leaves are updated & communicated.
 """
 

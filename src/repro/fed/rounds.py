@@ -1,12 +1,24 @@
-"""Compat shim: the FedTT / FedTT+ round logic moved to
+"""DEPRECATED compat shim: the FedTT / FedTT+ round logic moved to
 ``repro.fed.strategies`` (registry-backed Strategy objects usable from
 ``repro.fed.api.FedSession``).  Existing imports keep working through these
-re-exports."""
+re-exports but emit a ``DeprecationWarning`` on import.
+
+Migration: import the same names from ``repro.fed.strategies``, or drive
+whole rounds through ``FedSession`` -- the old-kwarg -> FedSession mapping
+table is in CHANGES.md (PR 1 entry) and ``fed/simulate.py``'s docstring.
+"""
 
 from __future__ import annotations
 
+import warnings
+
 from repro.fed.strategies import (aggregate, aggregate_stacked, count_true,
                                   fedtt_plus_factor_mask, trainable_mask)
+
+warnings.warn(
+    "repro.fed.rounds is a deprecated shim; import from repro.fed.strategies "
+    "(or use repro.fed.api.FedSession -- migration table in CHANGES.md, PR 1)",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["aggregate", "aggregate_stacked", "count_true",
            "fedtt_plus_factor_mask", "trainable_mask"]

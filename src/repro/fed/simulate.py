@@ -2,7 +2,8 @@
 :class:`repro.fed.api.FedSession`.
 
 ``run_federated(...)`` keeps the original 15-kwarg signature and forwards to
-a session so external callers don't break.  Kwarg mapping:
+a session so external callers don't break.  The authoritative migration
+table lives in CHANGES.md (PR 1 entry); kwarg mapping:
 
   ======================  =============================================
   old kwarg               FedSession knob
@@ -44,8 +45,9 @@ def run_federated(cfg: ModelConfig, task: ClassificationTask, *,
                   seed: int = 0) -> FedResult:
     """Deprecated: construct a :class:`repro.fed.api.FedSession` instead."""
     warnings.warn("run_federated() is deprecated; use "
-                  "repro.fed.api.FedSession", DeprecationWarning,
-                  stacklevel=2)
+                  "repro.fed.api.FedSession (kwarg migration table in "
+                  "CHANGES.md, PR 1, and in this module's docstring)",
+                  DeprecationWarning, stacklevel=2)
     return FedSession(
         cfg, task,
         sampler=(FractionSampler(client_fraction)

@@ -1,14 +1,23 @@
 """Jit-ready wrappers around the Pallas TT kernels.
 
-Forward runs the Pallas kernel (interpret=True off-TPU); backward is defined
-with jax.custom_vjp against the pure-jnp reference (exact same math), so the
-ops are fully differentiable for adapter training.  Batch dims are flattened
-and padded to the kernel block size.
+Forward AND backward run Pallas kernels (interpret=True off-TPU): the ops are
+jax.custom_vjp primitives whose backward rules are the fused chain-transpose
+kernels in ``tt_contract.py`` -- dx through the transposed factor chain,
+per-factor cotangents as batched contractions, and (for the fused adapter)
+the bottleneck activation rematerialized in VMEM.  ``ref.py`` stays the
+pure-jnp parity oracle; set ``REPRO_TT_BWD=ref`` to route the backward
+through it instead (escape hatch, see README "Architecture").  Both env
+vars are read at trace time -- set them before the op is first jitted.
+
+Batch dims are flattened and padded to the kernel block size.  The block size
+is chosen per TT spec from a VMEM-budget table over {128, 256, 512} (see
+``select_block_b``); ``REPRO_TT_BLOCK_B`` forces a specific value.
 """
 
 from __future__ import annotations
 
 import math
+import os
 from functools import lru_cache, partial
 from typing import Sequence
 
@@ -17,13 +26,78 @@ import jax.numpy as jnp
 
 from repro.core.tt import TTSpec
 from repro.kernels import ref
-from repro.kernels.tt_contract import tt_adapter_kernel, tt_linear_kernel
+from repro.kernels.tt_contract import (tt_adapter_bwd_kernel,
+                                       tt_adapter_kernel,
+                                       tt_linear_bwd_kernel, tt_linear_kernel)
 
-_BLOCK_B = 256
+# Candidate batch-tile sizes and the VMEM working-set budget the selection
+# table targets (fwd residuals + bwd temporaries, ~1/3 of a 16 MB VMEM core,
+# leaving room for Pallas double-buffering of the streamed tiles).
+_BLOCK_CANDIDATES = (512, 256, 128)
+_VMEM_BUDGET_BYTES = 6 * 2**20
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _use_ref_bwd() -> bool:
+    """Escape hatch: REPRO_TT_BWD=ref routes backward through the jnp oracle."""
+    val = os.environ.get("REPRO_TT_BWD", "pallas").strip().lower()
+    if val not in ("pallas", "ref"):
+        raise ValueError(
+            f"invalid REPRO_TT_BWD={val!r}: expected 'pallas' or 'ref'")
+    return val == "ref"
+
+
+# ---------------------------------------------------------------------------
+# Block-size selection table
+# ---------------------------------------------------------------------------
+
+def _chain_row_floats(spec: TTSpec) -> int:
+    """f32 scalars of per-batch-row state one fwd+bwd chain pass keeps in
+    VMEM: the x/y rows plus every saved GEMM left operand (tt_chain_fwd)."""
+    a = spec.split
+    in_dims = spec.core_dims[:a]
+    r = spec.ranks
+    total = spec.in_dim + spec.out_dim
+    for j in range(a):
+        rest = math.prod(in_dims[j + 1:]) if j + 1 < a else 1
+        total += rest * r[j] * spec.core_dims[j]
+    pre = 1
+    for j in range(a, spec.order):
+        total += pre * r[j]
+        pre *= spec.core_dims[j]
+    return total
+
+
+@lru_cache(maxsize=None)
+def _select_block_b(*specs: TTSpec) -> int:
+    """Largest candidate block whose chain working set fits the VMEM budget.
+
+    Keyed (and cached) on the spec shapes, like the kernel calls themselves:
+    e.g. the paper's 768x64 adapter projections get 256, small test shapes
+    get 512, and a 4096-dim down-projection drops to 128.
+    """
+    rows = sum(_chain_row_floats(s) for s in specs)
+    # x2: the bwd pass holds cotangent mirrors of the saved operands.
+    for cand in _BLOCK_CANDIDATES:
+        if 4 * cand * 2 * rows <= _VMEM_BUDGET_BYTES:
+            return cand
+    return _BLOCK_CANDIDATES[-1]
+
+
+def select_block_b(*specs: TTSpec) -> int:
+    env = os.environ.get("REPRO_TT_BLOCK_B")
+    if env:
+        try:
+            block_b = int(env)
+        except ValueError:
+            raise ValueError(f"invalid REPRO_TT_BLOCK_B={env!r}: not an int")
+        if block_b <= 0:
+            raise ValueError(f"invalid REPRO_TT_BLOCK_B={env!r}: must be > 0")
+        return block_b
+    return _select_block_b(*specs)
 
 
 @lru_cache(maxsize=None)
@@ -32,8 +106,19 @@ def _linear_call(spec: TTSpec, block_b: int, interpret: bool):
 
 
 @lru_cache(maxsize=None)
+def _linear_bwd_call(spec: TTSpec, block_b: int, interpret: bool):
+    return tt_linear_bwd_kernel(spec, block_b, interpret)
+
+
+@lru_cache(maxsize=None)
 def _adapter_call(spec_down: TTSpec, spec_up: TTSpec, block_b: int, interpret: bool):
     return tt_adapter_kernel(spec_down, spec_up, block_b, interpret)
+
+
+@lru_cache(maxsize=None)
+def _adapter_bwd_call(spec_down: TTSpec, spec_up: TTSpec, block_b: int,
+                      interpret: bool):
+    return tt_adapter_bwd_kernel(spec_down, spec_up, block_b, interpret)
 
 
 def _flatten_pad(x: jax.Array, in_dim: int, block_b: int):
@@ -52,8 +137,9 @@ def _flatten_pad(x: jax.Array, in_dim: int, block_b: int):
 
 @partial(jax.custom_vjp, nondiff_argnums=(2,))
 def tt_linear(x: jax.Array, factors: tuple, spec: TTSpec) -> jax.Array:
-    xf, batch_shape, b = _flatten_pad(x, spec.in_dim, _BLOCK_B)
-    y = _linear_call(spec, _BLOCK_B, _interpret())(xf, factors)
+    block_b = select_block_b(spec)
+    xf, batch_shape, b = _flatten_pad(x, spec.in_dim, block_b)
+    y = _linear_call(spec, block_b, _interpret())(xf, factors)
     return y[:b].reshape(batch_shape + (spec.out_dim,))
 
 
@@ -63,8 +149,16 @@ def _tt_linear_fwd(x, factors, spec):
 
 def _tt_linear_bwd(spec, res, g):
     x, factors = res
-    _, vjp = jax.vjp(lambda xx, ff: ref.tt_linear_ref(ff, spec, xx), x, tuple(factors))
-    dx, dfactors = vjp(g)
+    if _use_ref_bwd():
+        _, vjp = jax.vjp(lambda xx, ff: ref.tt_linear_ref(ff, spec, xx),
+                         x, tuple(factors))
+        return vjp(g)
+    block_b = select_block_b(spec)
+    xf, batch_shape, b = _flatten_pad(x, spec.in_dim, block_b)
+    gf, _, _ = _flatten_pad(g, spec.out_dim, block_b)
+    dx, dfs = _linear_bwd_call(spec, block_b, _interpret())(xf, gf, factors)
+    dx = dx[:b].reshape(batch_shape + (spec.in_dim,)).astype(x.dtype)
+    dfactors = tuple(df.astype(f.dtype) for df, f in zip(dfs, factors))
     return dx, dfactors
 
 
@@ -83,8 +177,9 @@ def tt_adapter_fused(down: Sequence[jax.Array], up: Sequence[jax.Array],
 
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4))
 def _tt_adapter(x, down, up, spec_down, spec_up):
-    xf, batch_shape, b = _flatten_pad(x, spec_down.in_dim, _BLOCK_B)
-    y = _adapter_call(spec_down, spec_up, _BLOCK_B, _interpret())(xf, down, up)
+    block_b = select_block_b(spec_down, spec_up)
+    xf, batch_shape, b = _flatten_pad(x, spec_down.in_dim, block_b)
+    y = _adapter_call(spec_down, spec_up, block_b, _interpret())(xf, down, up)
     return y[:b].reshape(batch_shape + (spec_up.out_dim,))
 
 
@@ -94,10 +189,20 @@ def _tt_adapter_fwd(x, down, up, spec_down, spec_up):
 
 def _tt_adapter_bwd(spec_down, spec_up, res, g):
     x, down, up = res
-    _, vjp = jax.vjp(
-        lambda xx, dd, uu: ref.tt_adapter_ref(dd, uu, spec_down, spec_up, xx),
-        x, tuple(down), tuple(up))
-    return vjp(g)
+    if _use_ref_bwd():
+        _, vjp = jax.vjp(
+            lambda xx, dd, uu: ref.tt_adapter_ref(dd, uu, spec_down, spec_up, xx),
+            x, tuple(down), tuple(up))
+        return vjp(g)
+    block_b = select_block_b(spec_down, spec_up)
+    xf, batch_shape, b = _flatten_pad(x, spec_down.in_dim, block_b)
+    gf, _, _ = _flatten_pad(g, spec_up.out_dim, block_b)
+    dx, dds, dus = _adapter_bwd_call(spec_down, spec_up, block_b,
+                                     _interpret())(xf, gf, down, up)
+    dx = dx[:b].reshape(batch_shape + (spec_down.in_dim,)).astype(x.dtype)
+    ddown = tuple(df.astype(f.dtype) for df, f in zip(dds, down))
+    dup = tuple(df.astype(f.dtype) for df, f in zip(dus, up))
+    return dx, ddown, dup
 
 
 _tt_adapter.defvjp(_tt_adapter_fwd, _tt_adapter_bwd)

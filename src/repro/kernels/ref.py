@@ -1,5 +1,10 @@
 """Pure-jnp oracles for the Pallas kernels (the reference every kernel test
-asserts against)."""
+asserts against, forward and backward).
+
+Differentiating these with jax.vjp yields the cotangents the Pallas backward
+kernels are parity-tested against; setting ``REPRO_TT_BWD=ref`` makes
+``kernels/ops.py`` route the custom_vjp backward through this module at
+runtime (the escape hatch documented in README "Architecture")."""
 
 from __future__ import annotations
 

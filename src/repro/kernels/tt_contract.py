@@ -1,6 +1,6 @@
-"""Pallas TPU kernel: TT-format linear layer forward (the paper's compute
-hot-spot -- §3.2 "the contraction process is significantly faster than the
-original matrix-vector product").
+"""Pallas TPU kernels: TT-format linear layer, forward AND backward (the
+paper's compute hot-spot -- §3.2 "the contraction process is significantly
+faster than the original matrix-vector product").
 
 TPU adaptation (DESIGN.md §2): the TT factors are tiny (<= a few KB at rank 5)
 and live wholly in VMEM for the duration of the kernel; activations stream
@@ -12,6 +12,17 @@ expand left-to-right.  Intermediates never leave VMEM.
 The fused adapter kernel (tt_adapter) chains down-chain -> GELU -> up-chain
 in one kernel so the bottleneck activation (BLOCK_B, 64) never round-trips
 to HBM -- the beyond-paper fusion measured in EXPERIMENTS.md §Perf.
+
+Backward kernels (DESIGN.md §2): dx back-propagates through the transposed
+factor chain (each fold/expand GEMM reversed with the factor transposed), and
+each per-factor cotangent dG_j is one batched contraction
+``saved_lhs_j^T @ d_out_j`` against the step's saved GEMM operand.  The chain
+intermediates are recomputed inside the kernel from the (x, factors)
+residuals -- including the adapter's bottleneck activation
+(rematerialize-in-kernel), so backward, like forward, streams only
+(BLOCK_B, dim) tiles through VMEM.  Per-factor cotangents are accumulated in
+f32 across the sequential batch grid into VMEM-resident output blocks
+(constant index_map -> the block is revisited, never flushed between steps).
 """
 
 from __future__ import annotations
@@ -25,21 +36,31 @@ from jax.experimental import pallas as pl
 
 from repro.core.tt import TTSpec
 
+# ---------------------------------------------------------------------------
+# Contraction chain on VMEM values (shared by forward and backward kernels)
+# ---------------------------------------------------------------------------
 
-def _contract_in_kernel(x, factors: list, spec: TTSpec):
-    """The contraction chain on VMEM values.  x: (TB, in_dim)."""
+
+def tt_chain_fwd(x, factors: list, spec: TTSpec):
+    """The contraction chain on VMEM values; x: (TB, in_dim).
+
+    Returns (y, saved) where saved[j] is the 2-D left operand of step j's
+    GEMM -- exactly the residuals the backward chain needs.
+    """
     tb = x.shape[0]
     a = spec.split
     in_dims = spec.core_dims[:a]
+    saved = []
 
     t = x.reshape((tb, 1) + tuple(in_dims))               # (TB, r0=1, k_1..k_a)
     for j in range(a):
         g = factors[j]                                    # (r_in, k, r_out)
         r_in, k, r_out = g.shape
         rest = math.prod(in_dims[j + 1:]) if j + 1 < a else 1
-        t = t.reshape((tb, r_in, k, rest)).transpose((0, 3, 1, 2))
-        t = t.reshape((tb * rest, r_in * k))
-        t = jnp.dot(t, g.reshape((r_in * k, r_out)),
+        lhs = t.reshape((tb, r_in, k, rest)).transpose((0, 3, 1, 2))
+        lhs = lhs.reshape((tb * rest, r_in * k))
+        saved.append(lhs)
+        t = jnp.dot(lhs, g.reshape((r_in * k, r_out)),
                     preferred_element_type=jnp.float32)
         t = t.reshape((tb, rest, r_out)).transpose((0, 2, 1))
     t = t.reshape((tb, factors[a - 1].shape[-1]))         # (TB, r_a)
@@ -49,11 +70,72 @@ def _contract_in_kernel(x, factors: list, spec: TTSpec):
         g = factors[j]
         r_in, k, r_out = g.shape
         pre = t.shape[1]
-        t = t.reshape((tb * pre, r_in))
-        t = jnp.dot(t, g.reshape((r_in, k * r_out)),
+        lhs = t.reshape((tb * pre, r_in))
+        saved.append(lhs)
+        t = jnp.dot(lhs, g.reshape((r_in, k * r_out)),
                     preferred_element_type=jnp.float32)
         t = t.reshape((tb, pre * k, r_out))
-    return t.reshape((tb, spec.out_dim))
+    return t.reshape((tb, spec.out_dim)), saved
+
+
+def tt_chain_bwd(dy, saved: list, factors: list, spec: TTSpec):
+    """VJP of tt_chain_fwd: (dy (TB, out_dim), saved) -> (dx, [dG_j ..]).
+
+    dx flows through the transposed factor chain (the reverse of each GEMM,
+    right-multiplied by G_j^T); each dG_j is the batched contraction
+    saved[j]^T @ d_out_j.  Everything accumulates in f32.
+    """
+    tb = dy.shape[0]
+    a = spec.split
+    in_dims = spec.core_dims[:a]
+    dfactors: list = [None] * spec.order
+
+    # ---- output cores, right-to-left (undo the expand steps)
+    r_last = factors[-1].shape[-1]                        # == 1
+    dt = dy.reshape((tb, spec.out_dim // r_last, r_last))
+    for j in range(spec.order - 1, a - 1, -1):
+        g = factors[j]
+        r_in, k, r_out = g.shape
+        pre = dt.shape[1] // k
+        d_out = dt.reshape((tb * pre, k * r_out))
+        lhs = saved[j]                                    # (TB*pre, r_in)
+        dfactors[j] = jnp.dot(lhs.T, d_out,
+                              preferred_element_type=jnp.float32
+                              ).reshape((r_in, k, r_out))
+        dt = jnp.dot(d_out, g.reshape((r_in, k * r_out)).T,
+                     preferred_element_type=jnp.float32)
+        dt = dt.reshape((tb, pre, r_in))
+
+    # boundary: forward reshaped (TB, r_a, rest=1) -> (TB, r_a) -> (TB, 1, r_a)
+    dt = dt.reshape((tb, factors[a - 1].shape[-1], 1))
+
+    # ---- input cores, right-to-left (undo the fold steps)
+    for j in range(a - 1, -1, -1):
+        g = factors[j]
+        r_in, k, r_out = g.shape
+        rest = math.prod(in_dims[j + 1:]) if j + 1 < a else 1
+        d_out = dt.reshape((tb, r_out, rest)).transpose((0, 2, 1))
+        d_out = d_out.reshape((tb * rest, r_out))
+        lhs = saved[j]                                    # (TB*rest, r_in*k)
+        dfactors[j] = jnp.dot(lhs.T, d_out,
+                              preferred_element_type=jnp.float32
+                              ).reshape((r_in, k, r_out))
+        d_lhs = jnp.dot(d_out, g.reshape((r_in * k, r_out)).T,
+                        preferred_element_type=jnp.float32)
+        dt = d_lhs.reshape((tb, rest, r_in, k)).transpose((0, 2, 3, 1))
+
+    dx = dt.reshape((tb, spec.in_dim))
+    return dx, dfactors
+
+
+def _contract_in_kernel(x, factors: list, spec: TTSpec):
+    """Forward-only chain (discard residuals).  x: (TB, in_dim)."""
+    return tt_chain_fwd(x, factors, spec)[0]
+
+
+# ---------------------------------------------------------------------------
+# Forward kernels
+# ---------------------------------------------------------------------------
 
 
 def tt_linear_kernel(spec: TTSpec, block_b: int, interpret: bool):
@@ -75,7 +157,7 @@ def tt_linear_kernel(spec: TTSpec, block_b: int, interpret: bool):
         in_specs = [pl.BlockSpec((block_b, spec.in_dim), lambda i: (i, 0))]
         # factors are whole-array resident in VMEM for every grid step
         for f in factors:
-            in_specs.append(pl.BlockSpec(f.shape, lambda i: (0,) * f.ndim))
+            in_specs.append(pl.BlockSpec(f.shape, lambda i, n=f.ndim: (0,) * n))
         return pl.pallas_call(
             kernel,
             grid=grid,
@@ -112,7 +194,7 @@ def tt_adapter_kernel(spec_down: TTSpec, spec_up: TTSpec, block_b: int,
         grid = (b // block_b,)
         in_specs = [pl.BlockSpec((block_b, spec_down.in_dim), lambda i: (i, 0))]
         for f in list(down) + list(up):
-            in_specs.append(pl.BlockSpec(f.shape, lambda i: (0,) * f.ndim))
+            in_specs.append(pl.BlockSpec(f.shape, lambda i, n=f.ndim: (0,) * n))
         return pl.pallas_call(
             kernel,
             grid=grid,
@@ -121,5 +203,139 @@ def tt_adapter_kernel(spec_down: TTSpec, spec_up: TTSpec, block_b: int,
             out_shape=jax.ShapeDtypeStruct((b, spec_up.out_dim), x.dtype),
             interpret=interpret,
         )(x, *down, *up)
+
+    return call
+
+
+# ---------------------------------------------------------------------------
+# Backward kernels
+# ---------------------------------------------------------------------------
+
+
+def _factor_accumulate(i, df_refs, dfs):
+    """Accumulate per-factor cotangents across the sequential batch grid.
+
+    The dG output blocks use a constant index_map, so Pallas keeps one
+    VMEM-resident block revisited by every grid step: initialize at i == 0,
+    read-modify-write after.
+    """
+    @pl.when(i == 0)
+    def _():
+        for r, df in zip(df_refs, dfs):
+            r[...] = df.astype(r.dtype)
+
+    @pl.when(i > 0)
+    def _():
+        for r, df in zip(df_refs, dfs):
+            r[...] += df.astype(r.dtype)
+
+
+def tt_linear_bwd_kernel(spec: TTSpec, block_b: int, interpret: bool):
+    """Build the pallas_call for the VJP of tt_linear.
+
+    (x, g, factors) -> (dx, [dG_j ..]); dG_j accumulated in f32 over the
+    batch grid.  The forward chain is recomputed in VMEM (residuals are just
+    x and the factors -- nothing batch-sized is saved between fwd and bwd).
+    """
+    n_factors = spec.order
+
+    def kernel(*refs):
+        x_ref, g_ref = refs[0], refs[1]
+        f_refs = refs[2:2 + n_factors]
+        dx_ref = refs[2 + n_factors]
+        df_refs = refs[3 + n_factors:]
+        i = pl.program_id(0)
+        x = x_ref[...]
+        g = g_ref[...]
+        factors = [f[...] for f in f_refs]
+        _, saved = tt_chain_fwd(x, factors, spec)
+        dx, dfs = tt_chain_bwd(g.astype(jnp.float32), saved, factors, spec)
+        dx_ref[...] = dx.astype(dx_ref.dtype)
+        _factor_accumulate(i, df_refs, dfs)
+
+    def call(x: jax.Array, g: jax.Array, factors: Sequence[jax.Array]):
+        b = x.shape[0]
+        assert b % block_b == 0, (b, block_b)
+        grid = (b // block_b,)
+        in_specs = [pl.BlockSpec((block_b, spec.in_dim), lambda i: (i, 0)),
+                    pl.BlockSpec((block_b, spec.out_dim), lambda i: (i, 0))]
+        for f in factors:
+            in_specs.append(pl.BlockSpec(f.shape, lambda i, n=f.ndim: (0,) * n))
+        out_specs = [pl.BlockSpec((block_b, spec.in_dim), lambda i: (i, 0))]
+        out_shape = [jax.ShapeDtypeStruct((b, spec.in_dim), x.dtype)]
+        for f in factors:
+            out_specs.append(pl.BlockSpec(f.shape, lambda i, n=f.ndim: (0,) * n))
+            out_shape.append(jax.ShapeDtypeStruct(f.shape, jnp.float32))
+        outs = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(x, g, *factors)
+        return outs[0], list(outs[1:])
+
+    return call
+
+
+def tt_adapter_bwd_kernel(spec_down: TTSpec, spec_up: TTSpec, block_b: int,
+                          interpret: bool):
+    """Build the pallas_call for the VJP of the fused adapter delta.
+
+    (x, g, down, up) -> (dx, [dD_j ..], [dU_j ..]).  The bottleneck
+    activation is rematerialized in VMEM from x (never saved to, or re-read
+    from, HBM); GELU is differentiated in f32 exactly as the forward kernel
+    computed it.
+    """
+    n_down = spec_down.order
+    n_up = spec_up.order
+
+    def kernel(*refs):
+        x_ref, g_ref = refs[0], refs[1]
+        d_refs = refs[2:2 + n_down]
+        u_refs = refs[2 + n_down:2 + n_down + n_up]
+        dx_ref = refs[2 + n_down + n_up]
+        dd_refs = refs[3 + n_down + n_up:3 + 2 * n_down + n_up]
+        du_refs = refs[3 + 2 * n_down + n_up:]
+        i = pl.program_id(0)
+        x = x_ref[...]
+        g = g_ref[...]
+        down = [f[...] for f in d_refs]
+        up = [f[...] for f in u_refs]
+        # rematerialize the bottleneck in VMEM (same math as the fwd kernel)
+        h_pre, saved_d = tt_chain_fwd(x, down, spec_down)
+        act, gelu_vjp = jax.vjp(jax.nn.gelu, h_pre.astype(jnp.float32))
+        h = act.astype(x.dtype)
+        _, saved_u = tt_chain_fwd(h, up, spec_up)
+        dh, dus = tt_chain_bwd(g.astype(jnp.float32), saved_u, up, spec_up)
+        dh_pre = gelu_vjp(dh)[0]
+        dx, dds = tt_chain_bwd(dh_pre, saved_d, down, spec_down)
+        dx_ref[...] = dx.astype(dx_ref.dtype)
+        _factor_accumulate(i, list(dd_refs) + list(du_refs), dds + dus)
+
+    def call(x: jax.Array, g: jax.Array, down: Sequence[jax.Array],
+             up: Sequence[jax.Array]):
+        b = x.shape[0]
+        assert b % block_b == 0, (b, block_b)
+        grid = (b // block_b,)
+        in_specs = [pl.BlockSpec((block_b, spec_down.in_dim), lambda i: (i, 0)),
+                    pl.BlockSpec((block_b, spec_up.out_dim), lambda i: (i, 0))]
+        for f in list(down) + list(up):
+            in_specs.append(pl.BlockSpec(f.shape, lambda i, n=f.ndim: (0,) * n))
+        out_specs = [pl.BlockSpec((block_b, spec_down.in_dim), lambda i: (i, 0))]
+        out_shape = [jax.ShapeDtypeStruct((b, spec_down.in_dim), x.dtype)]
+        for f in list(down) + list(up):
+            out_specs.append(pl.BlockSpec(f.shape, lambda i, n=f.ndim: (0,) * n))
+            out_shape.append(jax.ShapeDtypeStruct(f.shape, jnp.float32))
+        outs = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(x, g, *down, *up)
+        return outs[0], list(outs[1:1 + n_down]), list(outs[1 + n_down:])
 
     return call

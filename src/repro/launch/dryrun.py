@@ -90,7 +90,7 @@ def lower_one(arch: str, shape_name: str, multi_pod: bool = False,
         freeze_mask = None
         opt_target = params_shape["peft"]
         if cfg.peft.method == "fedtt_plus":
-            from repro.fed.rounds import trainable_mask
+            from repro.fed.strategies import trainable_mask
             from repro.train.step import partition_by_mask
             freeze_mask = trainable_mask(params_shape["peft"], cfg, round_idx=0)
             opt_target, _ = partition_by_mask(params_shape["peft"], freeze_mask)

@@ -4,7 +4,7 @@ sliding-window / cached decode), gated MLP.  Pure functional JAX.
 Attention is implemented with an online-softmax scan over KV chunks so 32k
 prefill never materializes an (S, S) score matrix -- the TPU-idiomatic
 flash-attention formulation at the XLA level (the Pallas budget of this repo
-belongs to the paper's own hot-spot, the TT contraction -- see DESIGN.md).
+belongs to the paper's own hot-spot, the TT contraction -- see DESIGN.md §2).
 """
 
 from __future__ import annotations

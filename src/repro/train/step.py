@@ -4,7 +4,9 @@ Only PEFT params receive gradients: the backbone is a frozen input to the
 loss (so XLA allocates no grads/optimizer state for it -- the point of PEFT).
 With the batch sharded over (pod, data) and adapters replicated, XLA inserts
 exactly one all-reduce per adapter tensor for the gradient -- that all-reduce
-payload IS the FedTT up-link message (DESIGN.md §2).
+payload IS the FedTT up-link message (DESIGN.md §8).  The adapter forward
+and backward both run the fused Pallas TT kernels when
+``cfg.peft.use_kernel`` is set (DESIGN.md §2).
 """
 
 from __future__ import annotations

@@ -11,7 +11,7 @@ from repro.configs.paper_models import TINY_ENCODER
 from repro.data.synthetic import ClassificationTask
 from repro.fed.client import local_step_classify
 from repro.fed.fedrun import fed_round_sharded, stack_clients
-from repro.fed.rounds import aggregate
+from repro.fed.strategies import aggregate
 from repro.models.transformer import classifier_init, model_init
 from repro.optim import sgd
 

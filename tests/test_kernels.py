@@ -1,5 +1,11 @@
 """Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracle
-(ref.py), forward and backward, interpret=True on CPU."""
+(ref.py), forward and backward, interpret=True on CPU.
+
+The backward tests assert leaf-for-leaf cotangent parity between the Pallas
+backward kernels (the default VJP since the bwd-kernel PR) and jax.vjp
+through ref.py -- on x, every down factor, and every up factor -- across odd
+batch sizes that exercise the padding path and (via REPRO_TT_BLOCK_B) the
+multi-block factor-cotangent accumulation."""
 
 import jax
 import jax.numpy as jnp
@@ -8,7 +14,7 @@ import pytest
 
 from repro.core.tt import make_tt_spec, tt_init
 from repro.kernels import ref
-from repro.kernels.ops import tt_adapter_fused, tt_linear
+from repro.kernels.ops import select_block_b, tt_adapter_fused, tt_linear
 
 SHAPES = [(768, 64), (64, 768), (2560, 64), (64, 2560), (256, 64), (128, 128)]
 DTYPES = [jnp.float32, jnp.bfloat16]
@@ -78,6 +84,157 @@ def test_tt_adapter_fused_grads():
     gr = jax.grad(lambda dd: jnp.sum(ref.tt_adapter_ref(dd, up, sd, su, x) ** 2))(down)
     for a, b in zip(gk, gr):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# Pallas backward kernels: leaf-for-leaf cotangent parity vs the ref VJP
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("batch", [1, 5, 127, 129, 300])
+def test_tt_linear_bwd_cotangent_parity(batch):
+    """dx and every dG_j from the Pallas backward match jax.vjp(ref) across
+    odd batch sizes (padding rows must contribute nothing)."""
+    spec = make_tt_spec(256, 64, 5)
+    fs = tuple(tt_init(jax.random.key(0), spec, zero_last=False))
+    x = jax.random.normal(jax.random.key(1), (batch, 256))
+    g = jax.random.normal(jax.random.key(2), (batch, 64))
+
+    _, vjp_k = jax.vjp(lambda xx, ff: tt_linear(xx, ff, spec), x, fs)
+    _, vjp_r = jax.vjp(lambda xx, ff: ref.tt_linear_ref(ff, spec, xx), x, fs)
+    (dx_k, dfs_k), (dx_r, dfs_r) = vjp_k(g), vjp_r(g)
+    np.testing.assert_allclose(np.asarray(dx_k), np.asarray(dx_r),
+                               rtol=1e-4, atol=1e-5)
+    assert len(dfs_k) == len(dfs_r) == spec.order
+    for a, b in zip(dfs_k, dfs_r):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("batch", [3, 65, 257])
+def test_tt_adapter_bwd_cotangent_parity(batch):
+    """Fused adapter backward (bottleneck rematerialized in-kernel): dx, all
+    down-factor and all up-factor cotangents match the ref VJP."""
+    sd, su = make_tt_spec(128, 32, 4), make_tt_spec(32, 128, 4)
+    down = tuple(tt_init(jax.random.key(2), sd, zero_last=False))
+    up = tuple(tt_init(jax.random.key(3), su, zero_last=False))
+    x = jax.random.normal(jax.random.key(4), (batch, 128))
+    g = jax.random.normal(jax.random.key(5), (batch, 128))
+
+    _, vjp_k = jax.vjp(
+        lambda xx, dd, uu: tt_adapter_fused(dd, uu, sd, su, xx), x, down, up)
+    _, vjp_r = jax.vjp(
+        lambda xx, dd, uu: ref.tt_adapter_ref(dd, uu, sd, su, xx), x, down, up)
+    (dx_k, dd_k, du_k), (dx_r, dd_r, du_r) = vjp_k(g), vjp_r(g)
+    np.testing.assert_allclose(np.asarray(dx_k), np.asarray(dx_r),
+                               rtol=1e-3, atol=1e-4)
+    for a, b in zip(list(dd_k) + list(du_k), list(dd_r) + list(du_r)):
+        assert a.shape == b.shape and a.dtype == b.dtype
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-3, atol=1e-3)
+
+
+def test_tt_linear_bwd_cotangent_parity_bf16():
+    """bf16 backward parity: cotangents keep the bf16 leaf dtypes and agree
+    with the bf16 ref VJP to bf16 tolerance (the kernel accumulates in f32
+    and casts back; the ref chain computes in bf16 throughout)."""
+    spec = make_tt_spec(128, 64, 4)
+    fs = tuple(f.astype(jnp.bfloat16)
+               for f in tt_init(jax.random.key(0), spec, zero_last=False))
+    x = jax.random.normal(jax.random.key(1), (9, 128)).astype(jnp.bfloat16)
+    g = jax.random.normal(jax.random.key(2), (9, 64)).astype(jnp.bfloat16)
+    _, vjp_k = jax.vjp(lambda xx, ff: tt_linear(xx, ff, spec), x, fs)
+    _, vjp_r = jax.vjp(lambda xx, ff: ref.tt_linear_ref(ff, spec, xx), x, fs)
+    (dx_k, dfs_k), (dx_r, dfs_r) = vjp_k(g), vjp_r(g)
+    for a, b in zip((dx_k,) + tuple(dfs_k), (dx_r,) + tuple(dfs_r)):
+        assert a.dtype == b.dtype == jnp.bfloat16
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=0.15, atol=0.15)
+
+
+def test_bwd_multiblock_factor_accumulation(monkeypatch):
+    """Force a small block so batch 300 pads to 3 grid steps: the f32
+    factor-cotangent accumulation across revisited output blocks must equal
+    the single-block answer."""
+    monkeypatch.setenv("REPRO_TT_BLOCK_B", "128")
+    spec = make_tt_spec(256, 64, 5)
+    fs = tuple(tt_init(jax.random.key(0), spec, zero_last=False))
+    x = jax.random.normal(jax.random.key(1), (300, 256))
+    g = jax.random.normal(jax.random.key(2), (300, 64))
+    _, vjp_k = jax.vjp(lambda xx, ff: tt_linear(xx, ff, spec), x, fs)
+    dx_k, dfs_k = vjp_k(g)
+    monkeypatch.delenv("REPRO_TT_BLOCK_B")
+    _, vjp_r = jax.vjp(lambda xx, ff: ref.tt_linear_ref(ff, spec, xx), x, fs)
+    dx_r, dfs_r = vjp_r(g)
+    np.testing.assert_allclose(np.asarray(dx_k), np.asarray(dx_r),
+                               rtol=1e-4, atol=1e-4)
+    for a, b in zip(dfs_k, dfs_r):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=2e-3)
+
+
+def test_bwd_ref_escape_hatch(monkeypatch):
+    """REPRO_TT_BWD=ref must route the backward through the jnp oracle and
+    agree with the default Pallas backward."""
+    spec = make_tt_spec(128, 64, 4)
+    fs = tuple(tt_init(jax.random.key(0), spec, zero_last=False))
+    x = jax.random.normal(jax.random.key(1), (9, 128))
+    loss = lambda xx, ff: jnp.sum(tt_linear(xx, ff, spec) ** 2)
+    g_pallas = jax.grad(loss, argnums=(0, 1))(x, fs)
+    monkeypatch.setenv("REPRO_TT_BWD", "ref")
+    g_ref = jax.grad(loss, argnums=(0, 1))(x, fs)
+    for a, b in zip(jax.tree.leaves(g_pallas), jax.tree.leaves(g_ref)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+
+
+def test_block_size_table_keyed_on_spec():
+    """The VMEM-budget table picks smaller blocks as the chain working set
+    grows, and the env override wins."""
+    small = select_block_b(make_tt_spec(128, 64, 4))
+    paper = select_block_b(make_tt_spec(768, 64, 5))
+    big = select_block_b(make_tt_spec(4096, 64, 5))
+    assert small >= paper >= big
+    assert {small, paper, big} <= {128, 256, 512}
+
+
+def test_adapter_grad_in_train_step():
+    """jax.grad through tt_adapter in a real training step: one train_step on
+    the kernel path (use_kernel=True) matches the jnp adapter path."""
+    import dataclasses
+
+    from repro.configs.base import PEFTConfig, get_config
+    from repro.models.transformer import model_init
+    from repro.optim import sgd
+    from repro.train.step import train_step
+
+    base = get_config("qwen3_4b", smoke=True)
+    cfg_j = dataclasses.replace(base, peft=PEFTConfig(method="fedtt"))
+    cfg_k = dataclasses.replace(base, peft=PEFTConfig(method="fedtt",
+                                                      use_kernel=True))
+    params = model_init(jax.random.key(0), cfg_j)
+    params["peft"] = jax.tree.map(
+        lambda p: p + 0.05 * jax.random.normal(jax.random.key(7), p.shape),
+        params["peft"])
+    batch = {"tokens": jax.random.randint(jax.random.key(1), (2, 32), 0,
+                                          base.vocab)}
+    opt = sgd(1e-2)
+    out = {}
+    for tag, cfg in [("jnp", cfg_j), ("kernel", cfg_k)]:
+        opt_state = opt.init(params["peft"])
+        new_params, _, metrics = jax.jit(
+            lambda p, o, b, c=cfg: train_step(p, o, b, cfg=c, optimizer=opt))(
+                params, opt_state, batch)
+        assert bool(jnp.isfinite(metrics["loss"]))
+        out[tag] = new_params["peft"]
+    moved = any(float(jnp.max(jnp.abs(a - b))) > 0
+                for a, b in zip(jax.tree.leaves(params["peft"]),
+                                jax.tree.leaves(out["kernel"])))
+    assert moved, "kernel-path train step did not update any PEFT parameter"
+    for a, b in zip(jax.tree.leaves(out["kernel"]), jax.tree.leaves(out["jnp"])):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-3, atol=2e-4)
 
 
 def test_kernel_under_jit_and_vmap():
