@@ -1,0 +1,162 @@
+"""Federated round-throughput benchmark: rounds/sec per backend.
+
+Measures how fast the simulator turns communication rounds for the three
+executors -- ``loop`` (python loop per client per step), ``sharded`` (one
+jitted vmap round), and ``scan`` (a whole window of rounds fused into one
+``lax.scan`` with donated carry buffers, ``fed/roundrun.py``) -- across the
+cross-silo -> cross-device client range {8, 32, 128} under the fp32 identity
+wire and the int8 delta channel.
+
+The interesting quantity is dispatch overhead, not FLOPs: all three backends
+run the same local-update math on the same plans, so the per-round wall-time
+gap over ``scan`` is what the python loop / per-round jit dispatch costs --
+exactly what bounds simulated cross-device scale (SLoRA-style hundreds of
+sampled clients over many rounds).  The default config therefore sits in the
+cross-device regime where that overhead dominates: tiny on-device batches
+(B=2) of short sequences (seq 8) and one local step, so per-round executor
+cost -- not encoder FLOPs -- is what the numbers resolve.  Results go to
+``BENCH_round.json``, the second point of the perf trajectory (after
+``BENCH_kernel.json``); render with
+``python scripts/render_experiments.py round``.
+
+    PYTHONPATH=src python benchmarks/bench_round.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+if __package__ in (None, ""):                 # `python benchmarks/bench_round.py`
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import row, tiny, write_bench_json
+from repro.data.synthetic import ClassificationTask
+from repro.fed.api import FedSession
+from repro.fed.backends import get_backend
+from repro.fed.channel import Int8DeltaChannel
+
+TASK = ClassificationTask(n_classes=2, vocab=256, seq_len=8, seed=0,
+                          signal=0.5)
+WINDOW = 8          # scan fused-window length
+LOCAL_STEPS = 1
+BATCH = 2           # cross-device on-device batch
+
+
+def _channel(name: str):
+    return [Int8DeltaChannel()] if name == "int8" else None
+
+
+def bench_config(backend_name: str, n_clients: int, channel: str,
+                 rounds: int, window: int) -> dict:
+    """Wall-time `rounds` communication rounds (after a compile warmup) and
+    return the ms/round + rounds/sec record."""
+    backend = get_backend(backend_name)
+    backend.window = window
+    sess = FedSession(tiny("fedtt"), TASK, backend=backend,
+                      channel=_channel(channel), n_clients=n_clients,
+                      n_rounds=rounds + window, local_steps=LOCAL_STEPS,
+                      batch_size=BATCH, train_per_client=16, eval_n=32,
+                      lr=1e-2, seed=0, eval_every=0)
+    rng, trainable, _ = sess._setup()
+
+    def run_chunked(trainable, start, n):
+        t = start
+        while t < start + n:
+            chunk = min(window, start + n - t)
+            plans = [sess._plan_round(t + i, rng) for i in range(chunk)]
+            trainable, _, _ = backend.run_rounds(sess, trainable, plans, t)
+            t += chunk
+        return trainable
+
+    # warmup = one compile unit: a full window for the fused backend, one
+    # round for the stepwise ones
+    warm = window if backend.fused else 1
+    trainable = run_chunked(trainable, 0, warm)
+    jax.block_until_ready(jax.tree.leaves(trainable)[0])
+
+    t0 = time.perf_counter()
+    trainable = run_chunked(trainable, warm, rounds)
+    jax.block_until_ready(jax.tree.leaves(trainable)[0])
+    dt = time.perf_counter() - t0
+
+    ms = dt / rounds * 1e3
+    rec = {"backend": backend_name, "n_clients": n_clients,
+           "channel": channel, "rounds_measured": rounds,
+           "ms_per_round": ms, "rounds_per_sec": rounds / dt}
+    row(f"round[{backend_name}][{n_clients}c][{channel}]", ms * 1e3,
+        f"rounds_per_sec={rounds / dt:.2f}")
+    return rec
+
+
+def summarize(results: list[dict]) -> list[dict]:
+    """Per (clients, channel): scan speedups and the per-round dispatch
+    overhead each stepwise backend pays over the fused executor."""
+    by = {(r["n_clients"], r["channel"]): {} for r in results}
+    for r in results:
+        by[(r["n_clients"], r["channel"])][r["backend"]] = r
+    out = []
+    for (n, ch), group in sorted(by.items()):
+        if "scan" not in group:
+            continue
+        scan_ms = group["scan"]["ms_per_round"]
+        rec = {"n_clients": n, "channel": ch}
+        for b in ("loop", "sharded"):
+            if b in group:
+                rec[f"speedup_scan_vs_{b}"] = (
+                    group[b]["ms_per_round"] / scan_ms)
+                rec[f"dispatch_overhead_ms_{b}"] = (
+                    group[b]["ms_per_round"] - scan_ms)
+        out.append(rec)
+    return out
+
+
+def run(smoke: bool = False, out_json: str | None = None) -> dict:
+    # smoke runs write a separate path so they never clobber the committed
+    # perf-trajectory file
+    if out_json is None:
+        out_json = "BENCH_round.smoke.json" if smoke else "BENCH_round.json"
+    window = 2 if smoke else WINDOW
+    client_counts = [8] if smoke else [8, 32, 128]
+    # rounds/sec needs few repetitions to stabilize; the slow python loop at
+    # 128 clients gets fewer measured rounds (each is ~100x a scan round)
+    measured = {"loop": {8: 8, 32: 4, 128: 2},
+                "sharded": {8: 8, 32: 8, 128: 4},
+                "scan": {8: 2 * WINDOW, 32: 2 * WINDOW, 128: WINDOW}}
+    if smoke:
+        measured = {"loop": {8: 2}, "sharded": {8: 2}, "scan": {8: 4}}
+
+    results = []
+    for channel in ("fp32", "int8"):
+        for n_clients in client_counts:
+            for backend in ("loop", "sharded", "scan"):
+                results.append(bench_config(
+                    backend, n_clients, channel,
+                    rounds=measured[backend][n_clients], window=window))
+
+    payload = {"meta": {"backend": jax.default_backend(), "smoke": smoke,
+                        "config": "tiny-encoder/fedtt",
+                        "local_steps": LOCAL_STEPS, "batch_size": BATCH,
+                        "scan_window": window},
+               "results": results,
+               "summary": summarize(results)}
+    write_bench_json(out_json, payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (separate output path)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, out_json=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -2,6 +2,7 @@
 EXPERIMENTS.md tables.
 
     PYTHONPATH=src python scripts/render_experiments.py kernel   # §Perf kernel table
+    PYTHONPATH=src python scripts/render_experiments.py round    # §Perf round-throughput table
     PYTHONPATH=src python scripts/render_experiments.py all      # roofline + hillclimb
 """
 
@@ -71,11 +72,54 @@ def kernel_table(path="BENCH_kernel.json"):
     return "\n".join(lines)
 
 
+def round_table(path="BENCH_round.json"):
+    """The EXPERIMENTS.md §Perf round-throughput table (rounds/sec per
+    backend across the client/channel grid, + scan speedup/dispatch
+    overhead)."""
+    with open(path) as f:
+        data = json.load(f)
+    meta = data["meta"]
+    by = {}
+    for r in data["results"]:
+        by.setdefault((r["n_clients"], r["channel"]), {})[r["backend"]] = r
+    lines = [f"Measured on backend=`{meta['backend']}`, "
+             f"config=`{meta['config']}`, local_steps={meta['local_steps']}, "
+             f"batch={meta['batch_size']}, scan window={meta['scan_window']}.",
+             "",
+             "| clients | channel | backend | ms/round | rounds/s | "
+             "x vs loop |",
+             "|---|---|---|---|---|---|"]
+    for (n, ch), group in sorted(by.items()):
+        loop_ms = group.get("loop", {}).get("ms_per_round")
+        for b in ("loop", "sharded", "scan"):
+            if b not in group:
+                continue
+            r = group[b]
+            speed = (f"{loop_ms / r['ms_per_round']:.1f}x"
+                     if loop_ms else "—")
+            lines.append(f"| {n} | {ch} | {b} | {r['ms_per_round']:.1f} | "
+                         f"{r['rounds_per_sec']:.2f} | {speed} |")
+    lines += ["", "Per-round dispatch overhead over the fused executor "
+              "(ms/round above scan):", ""]
+    for s in data.get("summary", []):
+        parts = [f"loop +{s['dispatch_overhead_ms_loop']:.0f} ms"
+                 if "dispatch_overhead_ms_loop" in s else "",
+                 f"sharded +{s['dispatch_overhead_ms_sharded']:.0f} ms"
+                 if "dispatch_overhead_ms_sharded" in s else ""]
+        lines.append(f"- {s['n_clients']} clients / {s['channel']}: "
+                     + ", ".join(p for p in parts if p))
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     if which == "kernel":
         print(kernel_table(sys.argv[2] if len(sys.argv) > 2
                            else "BENCH_kernel.json"))
+        sys.exit(0)
+    if which == "round":
+        print(round_table(sys.argv[2] if len(sys.argv) > 2
+                          else "BENCH_round.json"))
         sys.exit(0)
     if which in ("all", "sp"):
         print("### Single-pod (16x16)\n")

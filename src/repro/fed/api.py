@@ -10,8 +10,9 @@ One entry point, four orthogonal pluggable pieces:
   * **Channel** (``fed/channel.py``): composable up-link middleware stack
     (fp32 identity, int8 delta quantization, Gaussian DP perturbation), each
     stage reporting its own wire bytes into the :class:`CommLog`.
-  * **Backend** (``fed/backends.py``): the python-loop simulator vs the
-    vmap/mesh-sharded one-jit-per-round executor.
+  * **Backend** (``fed/backends.py``): the python-loop simulator, the
+    vmap/mesh-sharded one-jit-per-round executor, or the fused
+    scan-over-rounds window executor (``"scan"``, ``fed/roundrun.py``).
 
 Typical use::
 
@@ -54,6 +55,9 @@ class FedResult:
     n_communicated_round0: int
     best_acc: float
     trainable: dict | None = None
+    #: round index of each acc_history entry (eval_every > 1 evaluates a
+    #: subset of rounds; the final round is always included)
+    eval_rounds: list | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -78,7 +82,8 @@ class FedSession:
                  batch_size: int = 16, lr: float = 1e-3, optimizer=None,
                  train_per_client: int = 128, eval_n: int = 256,
                  hetero_proportions=None, hetero_alpha: float | None = None,
-                 local_dp: LocalDP | None = None, seed: int = 0):
+                 local_dp: LocalDP | None = None, seed: int = 0,
+                 eval_every: int = 1):
         self.cfg = cfg
         self.task = task
         self.strategy = (get_strategy(cfg.peft.method, cfg) if strategy is None
@@ -97,13 +102,21 @@ class FedSession:
         self.hetero_alpha = hetero_alpha
         self.local_dp = local_dp
         self.seed = seed
+        #: evaluate every E rounds (plus always the final round); 0 = final
+        #: round only.  Fused backends (scan) align their windows to eval
+        #: boundaries, so eval_every is also the max fused-window length.
+        self.eval_every = int(eval_every)
 
         # populated by _setup(); read by the backends
         self.pool = None
+        self.pool_gather = None
         self.shards = None
         self.backbone = None
         self.dp_key = None
         self.dp_sigma = None
+        self._opt_template = None
+        self._shard_sizes = None
+        self._shard_matrix = None
 
     # ------------------------------------------------------------------
     def _setup(self):
@@ -121,10 +134,26 @@ class FedSession:
                                 seed_offset=1)
         labels_np = np.asarray(pool["labels"])
         self.pool = pool
+
+        def gather(idx):
+            return jax.tree.map(lambda x: x[idx], pool)
+
+        # one batch-gather closure for the whole run (the loop backend calls
+        # it once per (client, step) instead of rebuilding the tree.map)
+        self.pool_gather = gather
         self.shards = label_skew_partition(
             labels_np, self.n_clients, proportions=self.hetero_proportions,
             alpha=self.hetero_alpha, seed=self.seed)
         self.sampler.bind([len(s) for s in self.shards])
+        # padded (n_clients, max_shard) index matrix for the vectorized
+        # per-round batch draw (_plan_round); positions are always < size,
+        # so the zero padding is never read
+        self._shard_sizes = np.array([len(s) for s in self.shards])
+        mat = np.zeros((self.n_clients, int(self._shard_sizes.max())),
+                       dtype=np.int64)
+        for ci, s in enumerate(self.shards):
+            mat[ci, :len(s)] = s
+        self._shard_matrix = mat
         eval_batch = self.task.sample(self.eval_n, seed_offset=2)
 
         cfg, task = self.cfg, self.task
@@ -148,39 +177,83 @@ class FedSession:
         return rng, global_trainable, eval_acc
 
     def _plan_round(self, round_idx: int, rng: np.random.Generator) -> RoundPlan:
-        selected = self.sampler.select(round_idx, self.n_clients, rng)
-        batch_idx = np.stack([
-            np.stack([rng.choice(self.shards[ci], size=self.batch_size,
-                                 replace=len(self.shards[ci]) < self.batch_size)
-                      for _ in range(self.local_steps)])
-            for ci in selected])
-        return RoundPlan(selected=np.asarray(selected), batch_idx=batch_idx)
+        """One round's work order: selected clients + (n_sel, K, B) batch
+        indices, drawn with ONE batched rng call (planning 128 clients x K
+        steps is one ``rng.random``, not n_sel*K python-level choices).
+
+        Batches sample each client's shard uniformly WITH replacement -- the
+        behaviour the per-client ``rng.choice`` loop already had for shards
+        smaller than the batch, now uniform for all shard sizes so the draw
+        vectorizes.  ``tests/test_fed_api.py::test_plan_round_pinned`` pins
+        the round-0 plan for the default seed."""
+        selected = np.asarray(self.sampler.select(round_idx, self.n_clients,
+                                                  rng))
+        sizes = self._shard_sizes[selected][:, None, None]
+        u = rng.random((len(selected), self.local_steps, self.batch_size))
+        pos = np.minimum((u * sizes).astype(np.int64), sizes - 1)
+        batch_idx = self._shard_matrix[selected[:, None, None], pos]
+        return RoundPlan(selected=selected, batch_idx=batch_idx)
+
+    def opt_template(self, view):
+        """Shared zero optimizer state for the view-is-global case, built
+        once per session (global shapes never change across rounds)."""
+        if self._opt_template is None:
+            self._opt_template = self.optimizer.init(view)
+        return self._opt_template
+
+    def _eval_due(self, round_idx: int) -> bool:
+        if round_idx == self.n_rounds - 1:
+            return True   # best_acc/acc_history are never empty
+        return self.eval_every > 0 and (round_idx + 1) % self.eval_every == 0
+
+    def _chunk_len(self, t: int) -> int:
+        """Rounds in the next backend chunk: at most the backend's window,
+        and -- for fused backends, whose intermediate rounds are not
+        observable -- never past the next eval boundary."""
+        chunk = min(max(int(self.backend.window), 1), self.n_rounds - t)
+        if self.backend.fused and self.eval_every > 0:
+            chunk = min(chunk, self.eval_every - (t % self.eval_every))
+        return chunk
 
     # ------------------------------------------------------------------
     def run(self) -> FedResult:
         rng, global_trainable, eval_acc = self._setup()
 
         comm = CommLog()
-        acc_history = []
-        n_trainable = count_true(self.strategy.mask(global_trainable, 0),
-                                 global_trainable)
-        n_comm0 = None
+        acc_history, eval_rounds = [], []
+        pending_acc, pending_rounds = [], []
+        mask0 = self.strategy.mask(global_trainable, 0)
+        n_trainable = count_true(mask0, global_trainable)
+        n_comm0 = n_trainable
 
-        for t in range(self.n_rounds):
-            plan = self._plan_round(t, rng)
-            global_trainable, kb, stage_kb = self.backend.run_round(
-                self, global_trainable, plan, t)
-            comm.record(kb, stages=stage_kb)
-            if n_comm0 is None:
-                n_comm0 = count_true(self.strategy.mask(global_trainable, 0),
-                                     global_trainable)
-            acc_history.append(float(eval_acc(global_trainable)))
+        def eval_hook(trainable, round_idx):
+            # queue the device scalar; the host transfer happens in one
+            # jax.device_get at the chunk boundary, not per round
+            if self._eval_due(round_idx):
+                pending_acc.append(eval_acc(trainable))
+                pending_rounds.append(round_idx)
+
+        t = 0
+        while t < self.n_rounds:
+            chunk = self._chunk_len(t)
+            plans = [self._plan_round(t + i, rng) for i in range(chunk)]
+            global_trainable, kbs, stage_list = self.backend.run_rounds(
+                self, global_trainable, plans, t, eval_hook)
+            for kb, stages in zip(kbs, stage_list):
+                comm.record(kb, stages=stages)
+            t += chunk
+            if pending_acc:
+                acc_history.extend(
+                    float(a) for a in jax.device_get(pending_acc))
+                eval_rounds.extend(pending_rounds)
+                pending_acc, pending_rounds = [], []
 
         return FedResult(acc_history=acc_history, comm=comm,
                          n_trainable=n_trainable,
                          n_communicated_round0=n_comm0,
                          best_acc=max(acc_history),
-                         trainable=global_trainable)
+                         trainable=global_trainable,
+                         eval_rounds=eval_rounds)
 
 
 __all__ = ["FedResult", "FedSession", "LocalDP"]

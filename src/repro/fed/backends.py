@@ -1,6 +1,6 @@
 """Execution backends for :class:`repro.fed.api.FedSession`.
 
-Both backends execute the same round semantics -- sample clients, K local
+All backends execute the same round semantics -- sample clients, K local
 updates per client, channel up-link, strategy aggregation -- and agree to
 floating-point tolerance on the aggregated trainable pytree:
 
@@ -8,14 +8,20 @@ floating-point tolerance on the aggregated trainable pytree:
     step.  Supports every strategy (including heterorank's per-client TT
     ranks), per-step DP-SGD, and any channel stack.
   * :class:`ShardedBackend`: all clients advance inside one jitted
-    ``vmap``/scan (``fed/fedrun.py``); with a transparent channel the
-    aggregation is the stacked mean that lowers to one all-reduce over the
-    mesh ``data`` axis.  Non-transparent channels (int8, DP noise) unstack
-    per client before aggregation; per-step DP-SGD is loop-only.
+    ``vmap``/scan per round (``fed/fedrun.py``); with a transparent channel
+    the aggregation is the stacked mean that lowers to one all-reduce over
+    the mesh ``data`` axis.  Non-transparent channels (int8, DP noise) run
+    the stack's device-side transform under ``vmap`` over the client axis --
+    no python unstack loop -- before the stacked aggregation.
+  * :class:`ScanBackend`: a whole *window* of rounds fused into one jitted
+    ``lax.scan`` with donated carry buffers (``fed/roundrun.py``) -- the
+    rounds/sec path for cross-device scale.  Falls back to the loop for
+    heterorank (per-client shapes) and per-step DP-SGD.
 
-A backend consumes the session's precomputed :class:`RoundPlan` (selected
-clients + batch indices), so both backends see identical data order and can
-be compared leaf-for-leaf.
+A backend consumes the session's precomputed :class:`RoundPlan`\\ s (selected
+clients + batch indices), so all backends see identical data order and can
+be compared leaf-for-leaf; comm accounting goes through the channel stack's
+static (shape-only) path so the ledger never forces a device sync.
 """
 
 from __future__ import annotations
@@ -30,12 +36,14 @@ import numpy as np
 from repro.fed import dp as dp_lib
 from repro.fed.client import classify_loss, local_step_classify
 from repro.fed.fedrun import client_updates_sharded
+from repro.fed.roundrun import (build_window_runner, stack_mask_mults,
+                                stacked_opt_init)
 from repro.optim import apply_updates, masked_update
 
 
 @dataclasses.dataclass
 class RoundPlan:
-    """Deterministic work order for one round (shared by both backends)."""
+    """Deterministic work order for one round (shared by all backends)."""
     selected: np.ndarray     # (n_sel,) client ids
     batch_idx: np.ndarray    # (n_sel, K, B) indices into the data pool
 
@@ -68,15 +76,39 @@ def _tree_add(a, b):
 
 
 class Backend:
-    """Runs one communication round; the session owns the outer loop."""
+    """Runs communication rounds; the session owns planning and evaluation."""
 
     name: str = "?"
+    #: rounds per run_rounds chunk -- the session flushes queued accuracy
+    #: reads with one host transfer at each chunk boundary
+    window: int = 8
+    #: True when a chunk executes as ONE fused program (no mid-chunk evals;
+    #: the session aligns chunk ends with eval_every boundaries)
+    fused: bool = False
 
     def run_round(self, session, global_trainable, plan: RoundPlan,
                   round_idx: int):
         """Returns (new global trainable, per-client up-link KB,
         per-stage KB dict)."""
         raise NotImplementedError
+
+    def run_rounds(self, session, global_trainable, plans: list,
+                   start_round: int, eval_hook=None):
+        """Advance one chunk of rounds.
+
+        Returns (new global trainable, per-round KB list, per-round stage-KB
+        list).  ``eval_hook(trainable, round_idx)`` is invoked after every
+        round it can observe (all of them for stepwise backends; only the
+        chunk's last for fused ones) and must not block."""
+        kbs, stage_list = [], []
+        for i, plan in enumerate(plans):
+            global_trainable, kb, stages = self.run_round(
+                session, global_trainable, plan, start_round + i)
+            kbs.append(kb)
+            stage_list.append(stages)
+            if eval_hook is not None:
+                eval_hook(global_trainable, start_round + i)
+        return global_trainable, kbs, stage_list
 
 
 class LoopBackend(Backend):
@@ -87,24 +119,23 @@ class LoopBackend(Backend):
     def run_round(self, session, global_trainable, plan, round_idx):
         strat, stack = session.strategy, session.channel
         mask_g = strat.mask(global_trainable, round_idx)
+        gather = session.pool_gather
 
         client_trees, kb_clients, stage_acc = [], [], {}
-        opt_template = None   # shared zero-state for the view-is-global case
         for i, ci in enumerate(plan.selected):
             view, ccfg = strat.client_view(global_trainable, int(ci))
             cfg_c = ccfg if ccfg is not None else session.cfg
             mask_c = (mask_g if view is global_trainable
                       else strat.mask(view, round_idx))
             if view is global_trainable:
-                if opt_template is None:
-                    opt_template = session.optimizer.init(view)
-                opt_state = opt_template
+                # shapes never change across rounds: one zero-state template
+                # per session, not one optimizer.init per client per round
+                opt_state = session.opt_template(view)
             else:
                 opt_state = session.optimizer.init(view)
             tr = view
             for k in range(session.local_steps):
-                batch = jax.tree.map(lambda x: x[plan.batch_idx[i, k]],
-                                     session.pool)
+                batch = gather(plan.batch_idx[i, k])
                 if session.local_dp is not None:
                     sk = jax.random.fold_in(
                         session.dp_key,
@@ -147,6 +178,7 @@ class ShardedBackend(Backend):
                              "(per-example vmap inside the client loop)")
         strat, stack = session.strategy, session.channel
         mask_g = strat.mask(global_trainable, round_idx)
+        n_sel = len(plan.selected)
 
         views = [strat.client_view(global_trainable, int(ci), uniform=True)[0]
                  for ci in plan.selected]
@@ -166,7 +198,21 @@ class ShardedBackend(Backend):
             agg = strat.aggregate_stacked(new_tr, mask_g)
             new_global = jax.tree.map(lambda x: x[0], agg)
             wire, per_stage = stack.account(global_trainable, mask_g)
+        elif strat.supports_stacked and stack.device_safe:
+            # non-transparent channel, uniform views: vmap the device-side
+            # transform over the client axis (no python unstack loop)
+            keys = tuple(k[0] for k in stack.window_keys(1, n_sel))
+            delta = _tree_sub(new_tr, stacked)
+            delta = jax.vmap(
+                lambda d, ks: stack.uplink_device(d, mask_g, ks))(delta, keys)
+            client_stacked = _tree_add(stacked, delta)
+            agg = strat.aggregate_stacked(client_stacked, mask_g)
+            new_global = jax.tree.map(lambda x: x[0], agg)
+            wire, per_stage = stack.account(global_trainable, mask_g)
         else:
+            # per-client strategies (heterorank) or host-only channel stages
+            # (a custom stage overriding transform() but not
+            # transform_device()): unstack and run the python uplink path
             client_trees, wires, stage_acc = [], [], {}
             for i in range(len(views)):
                 tr_i = jax.tree.map(lambda x, i=i: x[i], new_tr)
@@ -188,7 +234,97 @@ class ShardedBackend(Backend):
                 {n: b / 1024 for n, b in per_stage.items()})
 
 
-_BACKENDS = {"loop": LoopBackend, "sharded": ShardedBackend}
+class ScanBackend(Backend):
+    """A whole window of rounds fused into one jitted ``lax.scan`` with the
+    carried (trainable, stacked opt-state) buffers donated -- one dispatch
+    and zero host syncs per window (``fed/roundrun.py``; DESIGN.md §9).
+
+    Requires uniform client views and whole-batch gradients; delegates to
+    :class:`LoopBackend` for heterorank's per-client ranks and per-step
+    DP-SGD (see :meth:`fallback_reason`)."""
+
+    name = "scan"
+    fused = True
+
+    def __init__(self, window: int = 8):
+        self.window = int(window)
+        self._runner = None
+        self._runner_sig = None
+        #: the session the cached runner was compiled for (held strongly so
+        #: its id can never be recycled by a different session object)
+        self._runner_session = None
+        self._opt_buf = None
+        self._loop = LoopBackend()
+
+    def fallback_reason(self, session) -> str | None:
+        """Why this session cannot be scanned (None when it can)."""
+        if session.local_dp is not None:
+            return "per-step DP-SGD is loop-only"
+        if not session.strategy.supports_stacked:
+            return (f"strategy {session.strategy.name!r} uses per-client "
+                    "views/aggregation")
+        if not session.channel.transparent and not session.channel.device_safe:
+            return ("channel stack has a stage overriding transform() "
+                    "without transform_device()")
+        return None
+
+    def run_round(self, session, global_trainable, plan, round_idx):
+        tr, kbs, stages = self.run_rounds(session, global_trainable, [plan],
+                                          round_idx)
+        return tr, kbs[0], stages[0]
+
+    def run_rounds(self, session, global_trainable, plans, start_round,
+                   eval_hook=None):
+        if self.fallback_reason(session) is not None:
+            return self._loop.run_rounds(session, global_trainable, plans,
+                                         start_round, eval_hook)
+        n_sel = len(plans[0].selected)
+        if any(len(p.selected) != n_sel for p in plans):
+            # ragged per-round selection cannot stack into (R, N, K, B)
+            return self._loop.run_rounds(session, global_trainable, plans,
+                                         start_round, eval_hook)
+        strat, stack = session.strategy, session.channel
+        n_rounds = len(plans)
+
+        batch_idx = jnp.asarray(
+            np.stack([p.batch_idx for p in plans]), jnp.int32)
+        masks = [strat.mask(global_trainable, start_round + i)
+                 for i in range(n_rounds)]
+        mask_mults = stack_mask_mults(masks)
+        with_keys = bool(stack.key_stages)
+        stage_keys = (stack.window_keys(n_rounds, n_sel) if with_keys else ())
+
+        sig = (n_sel, with_keys)
+        if (self._runner is None or self._runner_sig != sig
+                or self._runner_session is not session):
+            self._runner = build_window_runner(session, n_sel, with_keys)
+            self._runner_sig = sig
+            self._runner_session = session
+            self._opt_buf = None
+        if self._opt_buf is None:
+            self._opt_buf = stacked_opt_init(session.optimizer,
+                                             global_trainable, n_sel)
+
+        # static (shape-only) comm accounting: cached per mask signature,
+        # zero device syncs for the whole window
+        kbs, stage_list = [], []
+        for m in masks:
+            wire, per_stage = stack.account(global_trainable, m)
+            kbs.append(wire / 1024)
+            stage_list.append({n: b / 1024 for n, b in per_stage.items()})
+
+        global_trainable, self._opt_buf = self._runner(
+            global_trainable, self._opt_buf, batch_idx, mask_mults,
+            stage_keys)
+        if eval_hook is not None:
+            # intermediate rounds are fused away; only the window's final
+            # state is observable (the session aligns eval boundaries)
+            eval_hook(global_trainable, start_round + n_rounds - 1)
+        return global_trainable, kbs, stage_list
+
+
+_BACKENDS = {"loop": LoopBackend, "sharded": ShardedBackend,
+             "scan": ScanBackend}
 
 
 def get_backend(spec) -> Backend:

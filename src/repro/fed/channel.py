@@ -17,6 +17,21 @@ every caller.
 Stages operate on the client *delta* (trained - downlinked view), touching
 only mask-True leaves: frozen leaves are not communicated (their delta is
 identically zero) and contribute no bytes.
+
+Two-surface API (DESIGN.md §9):
+
+* **Device side** -- :meth:`Channel.transform_device` is jit-safe and works
+  under ``jax.vmap`` over a leading client axis and under ``jax.lax.scan``
+  over rounds.  The mask leaves may be static python bools (sharded/loop
+  path) or traced 0/1 scalars (the scan executor turns per-round masks into
+  data so one program covers a whole window).  Stateful stages (DP noise)
+  take an explicit PRNG ``key`` instead of mutating python state, with
+  :meth:`Channel.device_keys` reserving the same key sequence the sequential
+  path would consume.
+* **Host side** -- :meth:`Channel.wire_bytes_static` computes a stage's wire
+  bytes from leaf *shapes* alone; :meth:`ChannelStack.account_static` caches
+  the figure per (shapes, mask) signature, so comm accounting costs zero
+  device syncs no matter how many rounds are fused into one program.
 """
 
 from __future__ import annotations
@@ -26,14 +41,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.fed import compress, dp as dp_lib
-from repro.fed.strategies import count_true
 
 BYTES_PER_PARAM = 4  # fp32 wire format, the paper's accounting
 
 
-def _masked_leaves(tree, mask):
-    return [(x, m) for x, m in zip(jax.tree.leaves(tree),
-                                   jax.tree.leaves(mask))]
+def _shape_sig(tree) -> tuple:
+    """Flat tuple of leaf shapes (the static accounting signature)."""
+    return tuple(tuple(x.shape) for x in jax.tree.leaves(tree))
+
+
+def _mask_sig(mask) -> tuple:
+    return tuple(bool(m) for m in jax.tree.leaves(mask))
+
+
+def _static_mask(m) -> bool:
+    """True when the mask leaf is a concrete python/numpy bool (host paths);
+    traced leaves (scan executor) fall through to the arithmetic form."""
+    return isinstance(m, (bool, np.bool_))
 
 
 class Channel:
@@ -41,20 +65,42 @@ class Channel:
 
     name = "identity"
     #: True when transform() is the identity (pure accounting stage); lets
-    #: the sharded backend keep its single stacked all-reduce.
+    #: the sharded/scan backends keep their single stacked all-reduce.
     transparent = True
+    #: True when transform_device consumes a PRNG key (stateful stages).
+    needs_key = False
 
-    def transform(self, delta, mask):
+    # -- device side --------------------------------------------------------
+    def transform_device(self, delta, mask, key=None):
         """What the server decodes: the delta after this stage's round trip
-        (quantize/dequantize, noise, ...).  Identity by default."""
-        del mask
+        (quantize/dequantize, noise, ...).  Identity by default.
+
+        jit-safe: usable under ``vmap`` over the client axis and ``scan``
+        over rounds; ``mask`` leaves may be python bools or traced 0/1
+        scalars.  Stateful stages receive their randomness via ``key``."""
+        del mask, key
         return delta
 
-    def wire_bytes(self, delta, mask) -> int | None:
-        """Per-client bytes this stage puts on the wire, or None if the
-        stage does not re-encode the payload (e.g. pure noise)."""
-        del delta, mask
+    def transform(self, delta, mask):
+        """Host-path entry point (python-loop backend): derives any needed
+        key from instance state, then runs the device transform."""
+        return self.transform_device(delta, mask)
+
+    def device_keys(self, n: int):
+        """Reserve ``n`` PRNG keys (stateful stages only)."""
+        raise NotImplementedError(f"{self.name} consumes no keys")
+
+    # -- host side ----------------------------------------------------------
+    def wire_bytes_static(self, shapes: tuple, masks: tuple) -> int | None:
+        """Per-client bytes this stage puts on the wire, computed from leaf
+        shapes alone (no device values), or None if the stage does not
+        re-encode the payload (e.g. pure noise)."""
+        del shapes, masks
         return None
+
+    def wire_bytes(self, delta, mask) -> int | None:
+        """Shape-based accounting on a live tree (compat entry point)."""
+        return self.wire_bytes_static(_shape_sig(delta), _mask_sig(mask))
 
 
 class IdentityFP32(Channel):
@@ -62,8 +108,9 @@ class IdentityFP32(Channel):
 
     name = "fp32"
 
-    def wire_bytes(self, delta, mask):
-        return BYTES_PER_PARAM * count_true(mask, delta)
+    def wire_bytes_static(self, shapes, masks):
+        return BYTES_PER_PARAM * sum(
+            int(np.prod(s)) for s, m in zip(shapes, masks) if m)
 
 
 class Int8DeltaChannel(Channel):
@@ -75,19 +122,22 @@ class Int8DeltaChannel(Channel):
     name = "int8"
     transparent = False
 
-    def transform(self, delta, mask):
-        def roundtrip(x, m):
-            if not m:
-                return x
-            q, scale = compress.quantize_tree(x)
-            return compress.dequantize_tree(q, scale)
-        return jax.tree.map(roundtrip, delta, mask)
+    def transform_device(self, delta, mask, key=None):
+        del key
 
-    def wire_bytes(self, delta, mask):
+        def leaf(x, m):
+            if _static_mask(m):
+                return compress.roundtrip_leaf(x) if m else x
+            return jnp.where(jnp.asarray(m, bool),
+                             compress.roundtrip_leaf(x), x)
+
+        return jax.tree.map(leaf, delta, mask)
+
+    def wire_bytes_static(self, shapes, masks):
         total = 0
-        for x, m in _masked_leaves(delta, mask):
+        for s, m in zip(shapes, masks):
             if m:
-                total += int(np.prod(x.shape)) + 4   # int8 payload + scale
+                total += int(np.prod(s)) + 4   # int8 payload + f32 scale
         return total
 
 
@@ -97,6 +147,7 @@ class DPGaussianChannel(Channel):
 
     name = "dp_noise"
     transparent = False
+    needs_key = True
 
     def __init__(self, clip: float = 1.0, sigma: float = 0.1, seed: int = 0):
         self.clip = float(clip)
@@ -104,22 +155,39 @@ class DPGaussianChannel(Channel):
         self._key = jax.random.key(seed)
         self._n_calls = 0
 
-    def transform(self, delta, mask):
-        sent = jax.tree.map(lambda x, m: x if m else jnp.zeros_like(x),
-                            delta, mask)
+    def device_keys(self, n: int):
+        """The next ``n`` keys of the sequential uplink key stream (advances
+        the counter by n, so fused windows and python loops draw the same
+        sequence).  One vmapped fold_in, not n eager dispatches -- a
+        128-client x 8-round window reserves 1024 keys per call."""
+        counts = jnp.arange(self._n_calls + 1, self._n_calls + n + 1)
+        keys = jax.vmap(lambda c: jax.random.fold_in(self._key, c))(counts)
+        self._n_calls += n
+        return keys
+
+    def transform_device(self, delta, mask, key=None):
+        def zero_frozen(x, m):
+            if _static_mask(m):
+                return x if m else jnp.zeros_like(x)
+            return x * jnp.asarray(m, x.dtype)
+
+        sent = jax.tree.map(zero_frozen, delta, mask)
         sent = dp_lib.clip_tree(sent, self.clip)
-        self._n_calls += 1
-        key = jax.random.fold_in(self._key, self._n_calls)
         keys = jax.random.split(key, len(jax.tree.leaves(sent)))
         it = iter(keys)
 
         def noise(x, m):
             k = next(it)
-            if not m:
-                return x
-            return x + self.sigma * self.clip * jax.random.normal(k, x.shape,
-                                                                  x.dtype)
+            n = self.sigma * self.clip * jax.random.normal(k, x.shape, x.dtype)
+            if _static_mask(m):
+                return x + n if m else x
+            return x + jnp.asarray(m, x.dtype) * n
+
         return jax.tree.map(noise, sent, mask)
+
+    def transform(self, delta, mask):
+        (key,) = self.device_keys(1)
+        return self.transform_device(delta, mask, key)
 
 
 class ChannelStack:
@@ -135,31 +203,93 @@ class ChannelStack:
         for s in self.stages:
             if not isinstance(s, Channel):
                 raise TypeError(f"not a Channel stage: {s!r}")
+        self._account_cache: dict = {}
 
     @property
     def transparent(self) -> bool:
         return all(s.transparent for s in self.stages)
 
-    def account(self, tree, mask):
-        """(wire bytes per client, per-stage bytes) without transforming.
+    @property
+    def device_safe(self) -> bool:
+        """True when every stage's uplink semantics live in
+        ``transform_device`` -- i.e. no stage overrides ``transform()``
+        (the pre-scan override point) without also overriding the device
+        form.  The vmapped/scanned executors only bypass the python
+        ``transform()`` path when this holds."""
+        for s in self.stages:
+            overrides_host = type(s).transform is not Channel.transform
+            overrides_device = (type(s).transform_device
+                                is not Channel.transform_device)
+            if overrides_host and not overrides_device:
+                return False
+        return True
 
-        Wire bytes depend only on shapes, so any tree with the payload's
-        structure works.  Falls back to fp32 accounting when no stage
-        re-encodes."""
+    @property
+    def key_stages(self) -> tuple:
+        """Indices of stages that consume PRNG keys on the device path."""
+        return tuple(i for i, s in enumerate(self.stages) if s.needs_key)
+
+    # -- host-side accounting (zero device syncs) ---------------------------
+    def account_static(self, shapes: tuple, masks: tuple):
+        """(wire bytes per client, per-stage bytes) from leaf shapes alone.
+
+        Cached per (shapes, masks) signature: a fused R-round window with a
+        cycling mask costs at most one accounting pass per distinct mask.
+        Falls back to fp32 accounting when no stage re-encodes."""
+        sig = (shapes, masks)
+        hit = self._account_cache.get(sig)
+        if hit is not None:
+            return hit
         per_stage = {}
         wire = None
         for s in self.stages:
-            b = s.wire_bytes(tree, mask)
+            b = s.wire_bytes_static(shapes, masks)
             if b is not None:
                 per_stage[s.name] = b
                 wire = b
         if wire is None:
-            wire = BYTES_PER_PARAM * count_true(mask, tree)
+            wire = BYTES_PER_PARAM * sum(
+                int(np.prod(s)) for s, m in zip(shapes, masks) if m)
             per_stage.setdefault("fp32", wire)
+        self._account_cache[sig] = (wire, per_stage)
         return wire, per_stage
 
+    def account(self, tree, mask):
+        """(wire bytes per client, per-stage bytes) without transforming.
+
+        Wire bytes depend only on shapes, so any tree with the payload's
+        structure works."""
+        return self.account_static(_shape_sig(tree), _mask_sig(mask))
+
+    # -- device-side transform ----------------------------------------------
+    def uplink_device(self, delta, mask, stage_keys=()):
+        """Run one client's delta through every stage, jit-safe.
+
+        ``stage_keys`` is a tuple aligned with :attr:`key_stages` (one key
+        per stateful stage for THIS client/round).  Usable under ``vmap``
+        over the client axis and ``scan`` over rounds."""
+        ki = 0
+        for s in self.stages:
+            if s.needs_key:
+                delta = s.transform_device(delta, mask, stage_keys[ki])
+                ki += 1
+            else:
+                delta = s.transform_device(delta, mask)
+        return delta
+
+    def window_keys(self, n_rounds: int, n_clients: int) -> tuple:
+        """Per-stage key arrays, each (n_rounds, n_clients), for a fused
+        window -- advancing every stateful stage's counter exactly as
+        ``n_rounds * n_clients`` sequential uplinks would."""
+        out = []
+        for s in self.stages:
+            if s.needs_key:
+                ks = s.device_keys(n_rounds * n_clients)
+                out.append(ks.reshape(n_rounds, n_clients))
+        return tuple(out)
+
     def uplink(self, delta, mask):
-        """Run the delta through every stage.
+        """Host-path uplink: run the delta through every stage.
 
         Returns (delta as decoded by the server, wire bytes per client,
         per-stage bytes dict)."""

@@ -17,12 +17,24 @@ import numpy as np
 INT8_MAX = 127.0
 
 
+def quantize_leaf(x):
+    """One f32 tensor -> (int8 payload, f32 scale).  THE quantization
+    scheme: every int8 path (tree payloads here, the channel middleware's
+    device-side roundtrip) goes through this function."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / INT8_MAX
+    return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8), scale
+
+
+def roundtrip_leaf(x):
+    """What the server decodes for one tensor: dequantize(quantize(x)).
+    jit/vmap-safe (used inside the fused round executor)."""
+    q, scale = quantize_leaf(x)
+    return q.astype(jnp.float32) * scale
+
+
 def quantize_tree(tree):
     """pytree of f32 -> (pytree of int8, pytree of f32 scales)."""
-    def q(x):
-        scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / INT8_MAX
-        return jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8), scale
-    pairs = jax.tree.map(q, tree)
+    pairs = jax.tree.map(quantize_leaf, tree)
     qs = jax.tree.map(lambda p: p[0], pairs, is_leaf=lambda x: isinstance(x, tuple))
     scales = jax.tree.map(lambda p: p[1], pairs, is_leaf=lambda x: isinstance(x, tuple))
     return qs, scales

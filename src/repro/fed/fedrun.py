@@ -10,6 +10,11 @@ one all-reduce whose payload is the FedTT up-link.
 :class:`~repro.fed.backends.ShardedBackend` composes it with a pluggable
 Strategy's aggregation.  ``fed_round_sharded`` keeps the original fused
 round (local updates + stacked FedAvg) for direct callers.
+
+This module fuses ONE round; ``fed/roundrun.py`` (DESIGN.md §9) extends the
+same vmap-over-clients structure to a whole *window* of rounds under an
+outer ``lax.scan`` with donated carry buffers -- the
+:class:`~repro.fed.backends.ScanBackend` rounds/sec path.
 """
 
 from __future__ import annotations

@@ -1,0 +1,119 @@
+"""Fused multi-round federated executor (DESIGN.md §9).
+
+One jitted program advances a whole *window* of R communication rounds as a
+``lax.scan`` over per-round work: gather every selected client's K local
+batches from the device-resident data pool by precomputed indices, run the
+K local updates for all N clients under ``jax.vmap``, push the stacked
+client deltas through the channel stack's device-side transform, and fold
+the strategy's masked FedAvg back into the carried global trainable --
+R rounds, zero host round trips.
+
+Two properties make the window scannable:
+
+* **Masks are data, not structure.**  Per-round trainable masks (FedTT+
+  factor cycling, RoLoRA alternation) become stacked 0/1 multipliers fed to
+  the scan as ``xs``; freezing is ``grads * m`` and aggregation is
+  ``m * mean + (1-m) * row0`` (``strategies.aggregate_stacked_mults``), so
+  one trace covers every round of the window.
+* **Buffer donation.**  The carried (trainable, stacked optimizer state)
+  pair is donated to the program (``donate_argnums=(0, 1)``), so each window
+  updates the global state in place instead of allocating a copy per call;
+  the optimizer buffer is zeroed at the top of every round body (clients
+  start each round fresh per FedAvg) without ever leaving the device.
+
+The executor requires uniform client views (``strategy.supports_stacked``)
+and whole-batch gradients; :class:`~repro.fed.backends.ScanBackend` falls
+back to the python loop for heterorank's per-client ranks and per-step
+DP-SGD.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.client import classify_loss
+from repro.optim import apply_updates
+
+
+def stack_mask_mults(masks: list):
+    """Per-round bool mask pytrees -> one pytree of (R,) f32 0/1 arrays
+    (the scan's per-round mask data)."""
+    return jax.tree.map(
+        lambda *ms: jnp.asarray(np.asarray(ms, np.float32)), *masks)
+
+
+def stacked_opt_init(optimizer, trainable, n_clients: int):
+    """Zeroed optimizer state with a leading client axis -- the reusable
+    (donated) carry buffer for the fused window."""
+    base = optimizer.init(trainable)
+    return jax.tree.map(
+        lambda x: jnp.zeros((n_clients,) + x.shape, x.dtype), base)
+
+
+def build_window_runner(session, n_sel: int, with_keys: bool):
+    """Compile the fused R-round window for one session configuration.
+
+    Returns a jitted ``runner(trainable, opt_buf, batch_idx, mask_mults,
+    stage_keys) -> (trainable, opt_buf)`` with both carried buffers donated.
+    Shapes: ``batch_idx`` (R, n_sel, K, B) int32 into the session pool;
+    ``mask_mults`` leaves (R,); ``stage_keys`` a tuple aligned with the
+    channel stack's key-consuming stages, each (R, n_sel).
+
+    The session's backbone and data pool are closed over (device-resident
+    constants of the compiled program); R is free, so the last short chunk
+    of a run compiles once more at its own length.
+    """
+    strat, stack = session.strategy, session.channel
+    cfg, n_classes = session.cfg, session.task.n_classes
+    optimizer = session.optimizer
+    backbone, pool = session.backbone, session.pool
+    transparent = stack.transparent
+
+    def one_client_round(view, opt0, client_batches, mm):
+        """K local steps for one client; mm: 0/1 scalar pytree (freeze)."""
+        def one_step(carry, batch):
+            tr, opt = carry
+            (_, _), grads = jax.value_and_grad(
+                classify_loss, has_aux=True)(tr, backbone, cfg, batch,
+                                             n_classes)
+            grads = jax.tree.map(lambda g, m: g * jnp.asarray(m, g.dtype),
+                                 grads, mm)
+            updates, opt = optimizer.update(grads, opt, tr)
+            return (apply_updates(tr, updates), opt), None
+
+        (tr, opt), _ = jax.lax.scan(one_step, (view, opt0), client_batches)
+        return tr, opt
+
+    def one_round(carry, xs):
+        trainable, opt_buf = carry
+        mm = xs["mask"]
+        views = jax.tree.map(
+            lambda x: jnp.broadcast_to(x[None], (n_sel,) + x.shape),
+            trainable)
+        # clients start every round from a fresh optimizer: zero the donated
+        # buffer in place rather than allocating a new state
+        opt0 = jax.tree.map(jnp.zeros_like, opt_buf)
+        batches = jax.tree.map(lambda x: x[xs["batch_idx"]], pool)
+        new_tr, new_opt = jax.vmap(one_client_round, in_axes=(0, 0, 0, None))(
+            views, opt0, batches, mm)
+        if not transparent:
+            delta = jax.tree.map(lambda a, b: a - b, new_tr, views)
+            keys = xs["keys"] if with_keys else ()
+            delta = jax.vmap(
+                lambda d, ks: stack.uplink_device(d, mm, ks))(delta, keys)
+            new_tr = jax.tree.map(lambda v, d: (v + d).astype(v.dtype),
+                                  views, delta)
+        new_global = strat.aggregate_stacked_mults(new_tr, mm)
+        return (new_global, new_opt), None
+
+    def run_window(trainable, opt_buf, batch_idx, mask_mults, stage_keys):
+        xs = {"batch_idx": batch_idx, "mask": mask_mults}
+        if with_keys:
+            xs["keys"] = stage_keys
+        (trainable, opt_buf), _ = jax.lax.scan(
+            one_round, (trainable, opt_buf), xs)
+        return trainable, opt_buf
+
+    return jax.jit(run_window, donate_argnums=(0, 1))

@@ -78,6 +78,29 @@ def aggregate_stacked(stacked_peft: dict, mask: dict | None = None) -> dict:
     return jax.tree.map(lambda x, m: agg_leaf(x, m), stacked_peft, mask)
 
 
+def aggregate_stacked_mults(stacked_peft: dict, mults: dict) -> dict:
+    """Scan-safe masked FedAvg over a leading client axis.
+
+    ``mults`` mirrors ``stacked_peft`` with 0./1. scalar leaves -- under the
+    fused round executor (``fed/roundrun.py``) the per-round mask is *data*
+    carried through ``lax.scan``, not static pytree structure, so the
+    select-or-average decision must be arithmetic.  Masked (communicated)
+    leaves average over the client axis; frozen leaves keep client 0's row
+    (identical across clients by construction).  Returns the UNSTACKED
+    aggregated tree."""
+
+    def agg(x, m):
+        m = jnp.asarray(m, x.dtype)
+        return (m * jnp.mean(x, axis=0) + (1 - m) * x[0]).astype(x.dtype)
+
+    return jax.tree.map(agg, stacked_peft, mults)
+
+
+def mask_multipliers(mask: dict):
+    """Bool mask pytree -> f32 0./1. scalar pytree (scan-executor form)."""
+    return jax.tree.map(lambda m: np.float32(bool(m)), mask)
+
+
 def count_true(mask_tree, params_tree) -> int:
     """Number of scalar params whose mask is True (communicated count)."""
     total = 0
@@ -140,6 +163,11 @@ class Strategy:
 
     def aggregate_stacked(self, stacked: dict, mask: dict | None = None) -> dict:
         return aggregate_stacked(stacked, mask)
+
+    def aggregate_stacked_mults(self, stacked: dict, mults: dict) -> dict:
+        """Masked stacked FedAvg with traced 0/1 multipliers (the scan
+        executor's aggregation; only meaningful when supports_stacked)."""
+        return aggregate_stacked_mults(stacked, mults)
 
 
 _REGISTRY: dict[str, type[Strategy]] = {}

@@ -81,7 +81,8 @@ def run_federated_mode(args) -> float:
     res = FedSession(cfg, task, backend=args.fed_backend,
                      sampler=args.client_fraction, n_clients=args.clients,
                      n_rounds=args.rounds, local_steps=args.local_steps,
-                     lr=args.lr, seed=args.seed).run()
+                     lr=args.lr, seed=args.seed,
+                     eval_every=args.eval_every).run()
     print(f"[fed] method={args.method} backend={args.fed_backend} "
           f"best_acc={res.best_acc:.3f} "
           f"uplink_total={res.comm.total_kb:.0f}KB "
@@ -104,8 +105,11 @@ def main(argv=None):
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--local-steps", type=int, default=2)
-    ap.add_argument("--fed-backend", choices=["loop", "sharded"],
+    ap.add_argument("--fed-backend", choices=["loop", "sharded", "scan"],
                     default="loop")
+    ap.add_argument("--eval-every", type=int, default=1,
+                    help="evaluate every E rounds (0 = final round only); "
+                         "also the scan backend's max fused-window length")
     ap.add_argument("--client-fraction", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)

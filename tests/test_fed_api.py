@@ -1,6 +1,7 @@
 """FedSession orchestration API: strategy registry semantics, stacked/listwise
 aggregation equivalence, channel wire-bytes accounting, samplers, backend
-parity, and the run_federated deprecation shim."""
+parity (loop vs sharded vs fused-scan), scan-window donation safety, the
+vectorized round planner, and the run_federated deprecation shim."""
 
 import dataclasses
 
@@ -178,13 +179,84 @@ def test_samplers_select_expected_counts():
     assert isinstance(get_sampler(1.0), FullParticipation)
 
 
+def test_host_only_custom_stage_honored_by_every_backend():
+    """Back-compat: a custom stage that overrides only transform() (the
+    pre-scan override point) must still run on all backends -- sharded keeps
+    the python uplink loop and scan falls back to loop instead of silently
+    treating the stage as identity."""
+    from repro.fed.channel import Channel
+
+    class Halve(Channel):
+        name = "halve"
+        transparent = False
+
+        def transform(self, delta, mask):
+            return jax.tree.map(lambda x, m: x * 0.5 if m else x, delta, mask)
+
+    assert not ChannelStack([Halve()]).device_safe
+    kw = dict(n_clients=2, n_rounds=1, local_steps=1, batch_size=8,
+              train_per_client=16, eval_n=16, lr=1e-2, seed=0)
+    results = [FedSession(_cfg("fedtt"), TASK, backend=b,
+                          channel=[Halve()], **kw).run()
+               for b in ("loop", "sharded", "scan")]
+    ident = FedSession(_cfg("fedtt"), TASK, **kw).run()
+    for other in results[1:]:
+        for a, b in zip(jax.tree.leaves(results[0].trainable),
+                        jax.tree.leaves(other.trainable)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-4)
+    # and the stage actually ran (halved deltas != identity run)
+    diffs = [float(jnp.max(jnp.abs(a - b)))
+             for a, b in zip(jax.tree.leaves(results[0].trainable),
+                             jax.tree.leaves(ident.trainable))]
+    assert max(diffs) > 1e-6
+
+
+def test_channel_static_accounting_matches_and_caches():
+    """account() is shape-only and cached: identical (shapes, mask)
+    signatures must return the cached tuple without recomputation, and the
+    figures must match the live-tree path bit for bit."""
+    tree = {"a": jnp.ones((100,)), "b": jnp.ones((10, 10))}
+    mask = {"a": True, "b": False}
+    stack = ChannelStack([IdentityFP32(), Int8DeltaChannel()])
+    wire, per_stage = stack.account(tree, mask)
+    assert wire == 104 and per_stage == {"fp32": 400, "int8": 104}
+    other = {"a": jnp.zeros((100,)), "b": jnp.zeros((10, 10))}
+    assert stack.account(other, mask) is stack.account(tree, mask)
+    # a different mask signature is a different cache entry
+    wire2, _ = stack.account(tree, {"a": True, "b": True})
+    assert wire2 == 208 and len(stack._account_cache) == 2
+
+
+# ---------------------------------------------------------------------------
+# Round planning: one batched draw, pinned for the default seed
+# ---------------------------------------------------------------------------
+
+def test_plan_round_pinned():
+    """The vectorized _plan_round (one rng.random call for all clients x
+    steps) is pinned for the default seed: regression-locks the round-0 plan
+    that every backend-parity figure in this file is derived from."""
+    sess = FedSession(_cfg("fedtt"), TASK, **SMALL)
+    rng, _, _ = sess._setup()
+    plan = sess._plan_round(0, rng)
+    assert plan.selected.tolist() == [0, 1, 2]
+    assert plan.batch_idx.shape == (3, 2, 8)      # (n_sel, K, B)
+    assert plan.batch_idx[0].tolist() == [
+        [58, 19, 5, 3, 76, 87, 55, 64], [48, 87, 76, 3, 77, 5, 64, 14]]
+    assert int(plan.batch_idx.sum()) == 2373
+    # every index stays inside its client's shard
+    for i, ci in enumerate(plan.selected):
+        assert set(plan.batch_idx[i].ravel().tolist()) <= set(
+            sess.shards[ci].tolist())
+
+
 # ---------------------------------------------------------------------------
 # Backends: every registered strategy through the same FedSession API
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("method", ["fedtt", "fedtt_plus", "lora", "ffa_lora",
                                     "rolora"])
-@pytest.mark.parametrize("backend", ["loop", "sharded"])
+@pytest.mark.parametrize("backend", ["loop", "sharded", "scan"])
 def test_both_backends_run_every_strategy(method, backend):
     res = FedSession(_cfg(method), TASK, backend=backend, n_clients=2,
                      n_rounds=1, local_steps=1, batch_size=8,
@@ -194,8 +266,10 @@ def test_both_backends_run_every_strategy(method, backend):
     assert res.n_trainable >= res.n_communicated_round0 > 0
 
 
-@pytest.mark.parametrize("backend", ["loop", "sharded"])
+@pytest.mark.parametrize("backend", ["loop", "sharded", "scan"])
 def test_heterorank_strategy_both_backends(backend):
+    """scan has no stacked path for heterorank -- it must fall back to the
+    loop executor and still produce a server-rank tree."""
     scfg = _cfg("fedtt", tt_rank=5)
     strat = HeteroRankStrategy(scfg, ranks=(2, 3, 5))
     res = FedSession(scfg, TASK, strategy=strat, backend=backend, n_clients=3,
@@ -218,19 +292,74 @@ def test_heterorank_loop_uplink_shrinks_with_client_rank():
     assert lo.comm.total_kb < hi.comm.total_kb
 
 
+@pytest.mark.parametrize("channel", ["fp32", "int8"])
 @pytest.mark.parametrize("method", ["fedtt", "fedtt_plus"])
-def test_backend_parity_loop_vs_sharded(method):
-    """Acceptance: python-loop and sharded backends agree on the aggregated
-    trainable pytree (same strategy, same data plan) within fp tolerance."""
+def test_backend_parity_loop_vs_sharded_vs_scan(method, channel):
+    """Acceptance: the python-loop, sharded, and fused-scan backends agree
+    leaf-for-leaf on the aggregated trainable pytree (same strategy, same
+    data plan) within fp tolerance, with identical per-round CommLog figures
+    -- under the fp32 identity wire AND the int8 delta channel."""
     cfg = _cfg(method)
-    res_loop = FedSession(cfg, TASK, backend="loop", **SMALL).run()
-    res_shard = FedSession(cfg, TASK, backend="sharded", **SMALL).run()
-    for a, b in zip(jax.tree.leaves(res_loop.trainable),
-                    jax.tree.leaves(res_shard.trainable)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
-                                   rtol=2e-4, atol=1e-4)
-    np.testing.assert_allclose(res_loop.comm.total_kb,
-                               res_shard.comm.total_kb)
+
+    def session(backend, **kw):
+        chan = [Int8DeltaChannel()] if channel == "int8" else None
+        return FedSession(cfg, TASK, backend=backend, channel=chan,
+                          **SMALL, **kw)
+
+    res_loop = session("loop").run()
+    res_shard = session("sharded").run()
+    # eval_every=0 exercises the multi-round fused window (window > 1)
+    res_scan = session("scan", eval_every=0).run()
+    for other in (res_shard, res_scan):
+        for a, b in zip(jax.tree.leaves(res_loop.trainable),
+                        jax.tree.leaves(other.trainable)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-4, atol=1e-4)
+        # per-round ledger equality, not just the total: the scan backend's
+        # static (shape-only) accounting must reproduce the live figures
+        np.testing.assert_allclose(res_loop.comm.uplink_kb_per_round,
+                                   other.comm.uplink_kb_per_round)
+        assert res_loop.comm.stage_kb.keys() == other.comm.stage_kb.keys()
+        for name in res_loop.comm.stage_kb:
+            np.testing.assert_allclose(res_loop.comm.stage_kb[name],
+                                       other.comm.stage_kb[name])
+
+
+def test_scan_window_donation_safety():
+    """The fused window donates its carried (trainable, opt-state) buffers:
+    the donated input must actually be consumed (deleted), and XLA must not
+    warn that a donated buffer could not be used (which would mean the
+    program re-reads it and silently copies)."""
+    import warnings
+
+    sess = FedSession(_cfg("fedtt"), TASK, backend="scan", eval_every=0,
+                      **SMALL)
+    rng, trainable, _ = sess._setup()
+    in_leaf = jax.tree.leaves(trainable)[0]
+    plans = [sess._plan_round(i, rng) for i in range(2)]
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", message=".*[Dd]onat.*")
+        new_tr, kbs, _ = sess.backend.run_rounds(sess, trainable, plans, 0)
+    assert in_leaf.is_deleted()
+    opt_leaf = jax.tree.leaves(sess.backend._opt_buf)[0]
+    with warnings.catch_warnings():
+        warnings.filterwarnings("error", message=".*[Dd]onat.*")
+        sess.backend.run_rounds(sess, new_tr, plans, 2)
+    assert opt_leaf.is_deleted()   # the opt buffer is donated across windows
+    assert len(kbs) == 2 and all(kb > 0 for kb in kbs)
+
+
+def test_eval_every_batches_accuracy_reads():
+    kw = dict(n_clients=2, n_rounds=5, local_steps=1, batch_size=8,
+              train_per_client=16, eval_n=16, lr=1e-2)
+    res = FedSession(_cfg("fedtt"), TASK, eval_every=2, **kw).run()
+    assert res.eval_rounds == [1, 3, 4]     # every 2nd round + the final one
+    assert len(res.acc_history) == 3
+    res0 = FedSession(_cfg("fedtt"), TASK, backend="scan", eval_every=0,
+                      **kw).run()
+    assert res0.eval_rounds == [4] and len(res0.acc_history) == 1
+    # comm is recorded for every round regardless of eval cadence
+    assert len(res0.comm.uplink_kb_per_round) == 5
 
 
 def test_sharded_backend_rejects_dp_sgd():

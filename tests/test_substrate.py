@@ -113,10 +113,18 @@ def test_hlo_flops_scan_trip_count():
 def test_hlo_collective_bytes():
     from repro.launch.hlo_analysis import analyze_hlo
     from jax.sharding import PartitionSpec as P
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
-    f = jax.shard_map(lambda x: jax.lax.psum(x, "data"), mesh=mesh,
-                      in_specs=P(None), out_specs=P(None))
+    # version-compatible mesh: axis_types / jax.shard_map only exist in
+    # newer JAX; the pinned version uses the experimental shard_map
+    mesh_kwargs = {}
+    if hasattr(jax.sharding, "AxisType"):
+        mesh_kwargs["axis_types"] = (jax.sharding.AxisType.Auto,)
+    mesh = jax.make_mesh((1,), ("data",), **mesh_kwargs)
+    if hasattr(jax, "shard_map"):
+        shard_map = jax.shard_map
+    else:
+        from jax.experimental.shard_map import shard_map
+    f = shard_map(lambda x: jax.lax.psum(x, "data"), mesh=mesh,
+                  in_specs=P(None), out_specs=P(None))
     c = jax.jit(f).lower(jnp.zeros((64, 64), jnp.float32)).compile()
     r = analyze_hlo(c.as_text())
     assert r.coll_breakdown["all-reduce"] == 64 * 64 * 4
