@@ -1,0 +1,200 @@
+"""Multi-tenant serving throughput: banked vs sequential per-adapter engines.
+
+The deployment story of FedTT (DESIGN.md §10): federated fine-tuning emits
+one tiny TT-adapter set per client/silo, and serving traffic arrives
+interleaved across those tenants -- at any moment each tenant has ~1 request
+in flight.  Two ways to serve it:
+
+  * **sequential** -- a single-adapter :class:`ServeEngine` per tenant:
+    host-swap the adapter (``swap_peft``), serve that tenant's request, move
+    on.  Cross-tenant requests can never share a batch, so with A tenants the
+    decode batch is 1/A utilized.
+  * **banked** -- ONE engine with a device-resident :class:`AdapterBank`:
+    every slot gathers its own tenant's TT factors inside the jitted decode
+    step, so A concurrent cross-tenant requests fill A slots of the SAME
+    batch.
+
+Both engines run the same jitted ``model_decode_step`` math per step, so
+tokens/sec resolves exactly the batching win (≈ min(A, slots)x, minus the
+per-row factor-gather overhead).  Sweeps adapters x slots x {greedy, top-k}.
+Results go to ``BENCH_serve.json`` -- the third pillar of the perf
+trajectory after BENCH_kernel.json and BENCH_round.json; render with
+``python scripts/render_experiments.py serve``.
+
+    PYTHONPATH=src python benchmarks/bench_serve.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+if __package__ in (None, ""):                 # `python benchmarks/bench_serve.py`
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import row, write_bench_json
+from repro.configs.base import get_config
+from repro.models.transformer import model_init
+from repro.serve import AdapterBank, Request, ServeEngine
+
+PROMPT = [17, 23, 31, 5, 9, 13]
+MAX_LEN = 64
+
+
+def make_adapters(cfg, n: int) -> list:
+    """n distinct (perturbed) adapter sets -- stand-ins for per-tenant
+    federated fine-tuning outputs (zero-init adapters would all be
+    identical; serving cost is the same either way)."""
+    base = model_init(jax.random.key(0), cfg)["peft"]
+    out = []
+    for a in range(n):
+        leaves, treedef = jax.tree.flatten(base)
+        keys = jax.random.split(jax.random.key(1000 + a), len(leaves))
+        leaves = [l + 0.05 * jax.random.normal(k, l.shape)
+                  for l, k in zip(leaves, keys)]
+        out.append(jax.tree.unflatten(treedef, leaves))
+    return out
+
+
+def _requests(n_adapters: int, sampling: str, banked: bool,
+              max_new: int) -> list:
+    kw = ({"temperature": 0.0} if sampling == "greedy"
+          else {"temperature": 0.8, "top_k": 20})
+    return [Request(prompt=list(PROMPT), max_new_tokens=max_new,
+                    adapter=a if banked else 0, **kw)
+            for a in range(n_adapters)]
+
+
+def _drain(engine) -> tuple[int, int]:
+    """(engine steps, generated tokens) for the queued workload."""
+    engine.finished = []
+    steps = engine.run_until_done()
+    return steps, sum(len(g) for _, g in engine.finished)
+
+
+def bench_banked(cfg, backbone, adapters, slots: int, sampling: str,
+                 reps: int, max_new: int) -> dict:
+    bank = AdapterBank(adapters)
+    engine = ServeEngine(cfg, {"backbone": backbone}, batch_slots=slots,
+                         max_len=MAX_LEN, bank=bank)
+    A = len(adapters)
+
+    def one_pass():
+        for r in _requests(A, sampling, banked=True, max_new=max_new):
+            engine.submit(r)
+        return _drain(engine)
+
+    one_pass()                                   # compile + warm
+    t0 = time.perf_counter()
+    steps = tokens = 0
+    for _ in range(reps):
+        s, t = one_pass()
+        steps += s
+        tokens += t
+    dt = time.perf_counter() - t0
+    return {"engine": "banked", "adapters": A, "slots": slots,
+            "sampling": sampling, "steps": steps, "tokens": tokens,
+            "wall_s": dt, "tokens_per_sec": tokens / dt}
+
+
+def bench_sequential(cfg, backbone, adapters, slots: int, sampling: str,
+                     reps: int, max_new: int) -> dict:
+    """One single-adapter engine; per tenant: host-swap the adapter, serve
+    its request.  Same slot count, but cross-tenant requests cannot share a
+    batch."""
+    engine = ServeEngine(cfg, {"backbone": backbone, "peft": adapters[0]},
+                         batch_slots=slots, max_len=MAX_LEN)
+    A = len(adapters)
+
+    def one_pass():
+        steps = tokens = 0
+        for a, req in enumerate(_requests(A, sampling, banked=False,
+                                          max_new=max_new)):
+            engine.swap_peft(adapters[a])
+            engine.submit(req)
+            s, t = _drain(engine)
+            steps += s
+            tokens += t
+        return steps, tokens
+
+    one_pass()                                   # compile + warm
+    t0 = time.perf_counter()
+    steps = tokens = 0
+    for _ in range(reps):
+        s, t = one_pass()
+        steps += s
+        tokens += t
+    dt = time.perf_counter() - t0
+    return {"engine": "sequential", "adapters": A, "slots": slots,
+            "sampling": sampling, "steps": steps, "tokens": tokens,
+            "wall_s": dt, "tokens_per_sec": tokens / dt}
+
+
+def summarize(results: list[dict]) -> list[dict]:
+    by = {}
+    for r in results:
+        by.setdefault((r["adapters"], r["slots"], r["sampling"]), {})[
+            r["engine"]] = r
+    out = []
+    for (a, s, samp), group in sorted(by.items()):
+        if "banked" not in group or "sequential" not in group:
+            continue
+        out.append({
+            "adapters": a, "slots": s, "sampling": samp,
+            "speedup_banked_vs_sequential":
+                group["banked"]["tokens_per_sec"]
+                / group["sequential"]["tokens_per_sec"]})
+    return out
+
+
+def run(smoke: bool = False, out_json: str | None = None) -> dict:
+    # smoke runs write a separate path so they never clobber the committed
+    # perf-trajectory file
+    if out_json is None:
+        out_json = "BENCH_serve.smoke.json" if smoke else "BENCH_serve.json"
+    cfg = get_config("qwen3_4b", smoke=True)
+    backbone = model_init(jax.random.key(0), cfg)["backbone"]
+
+    grid = [(2, 2)] if smoke else [(1, 8), (4, 8), (8, 8)]
+    samplings = ["greedy"] if smoke else ["greedy", "topk"]
+    reps = 1 if smoke else 2
+    max_new = 8 if smoke else 32
+
+    adapters_all = make_adapters(cfg, max(a for a, _ in grid))
+    results = []
+    for sampling in samplings:
+        for n_adapters, slots in grid:
+            adapters = adapters_all[:n_adapters]
+            for fn in (bench_banked, bench_sequential):
+                r = fn(cfg, backbone, adapters, slots, sampling, reps,
+                       max_new)
+                results.append(r)
+                row(f"serve[{r['engine']}][{n_adapters}a x {slots}s]"
+                    f"[{sampling}]", 1e6 / r["tokens_per_sec"],
+                    f"tokens_per_sec={r['tokens_per_sec']:.1f}")
+
+    payload = {"meta": {"backend": jax.default_backend(), "smoke": smoke,
+                        "config": cfg.name, "prompt_len": len(PROMPT),
+                        "max_new_tokens": max_new, "reps": reps},
+               "results": results,
+               "summary": summarize(results)}
+    write_bench_json(out_json, payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (separate output path)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, out_json=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

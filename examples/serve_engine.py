@@ -1,8 +1,12 @@
-"""Continuous-batching serving engine demo (src/repro/serve).
+"""Multi-tenant serving demo: federated fine-tuning -> adapter bank -> one
+engine serving every tenant (src/repro/serve, DESIGN.md §10).
 
-Submits a mixed workload (different prompt lengths, generation budgets and
-sampling settings) to a 4-slot engine; slots are reused as requests finish --
-the production serving pattern over one jitted decode step.
+Two tenants each run a (tiny) federated fine-tuning session on their own
+task; the aggregated TT adapters are exported (`FedResult.export_adapter`),
+stacked into a device-resident `AdapterBank`, and a single 4-slot engine
+serves a mixed workload where concurrent requests hit DIFFERENT fine-tuned
+adapters in the same jitted decode batch -- no recompilation, no host-side
+weight swapping.
 
     PYTHONPATH=src python examples/serve_engine.py
 """
@@ -10,22 +14,56 @@ the production serving pattern over one jitted decode step.
 import time
 
 import jax
+import jax.numpy as jnp
 
 from repro.configs.base import get_config
-from repro.models.transformer import model_init
-from repro.serve import Request, ServeEngine
+from repro.data.synthetic import ClassificationTask
+from repro.fed.api import FedSession
+from repro.serve import AdapterBank, Request, ServeEngine
 
-cfg = get_config("qwen3_4b", smoke=True)
-params = model_init(jax.random.key(0), cfg)
-engine = ServeEngine(cfg, params, batch_slots=4, max_len=256, seed=0)
+cfg = get_config("qwen3_4b", smoke=True)        # fedtt adapters by default
+
+# --- federated fine-tuning, one session per tenant -------------------------
+# Tenants differ in DATA (per-tenant task seed) but share the foundation
+# model: the session `seed` derives the backbone init, so it must be the
+# same across tenants for their adapters to be bankable on one backbone.
+print("fine-tuning 2 tenants...")
+results = []
+for tenant in range(2):
+    task = ClassificationTask(n_classes=2, vocab=256, seq_len=8, seed=tenant,
+                              signal=0.5)
+    res = FedSession(cfg, task, n_clients=4, n_rounds=3, local_steps=2,
+                     batch_size=8, train_per_client=32, eval_n=64,
+                     lr=5e-2, seed=0).run()
+    print(f"  tenant {tenant}: best_acc={res.best_acc:.2f} "
+          f"uplink={res.comm.total_kb:.0f} KB")
+    results.append(res)
+
+# both tenants fine-tuned the SAME frozen backbone; serve that one
+assert all(
+    jnp.array_equal(a, b) for a, b in
+    zip(jax.tree.leaves(results[0].backbone),
+        jax.tree.leaves(results[1].backbone)))
+backbone = results[0].backbone
+
+# --- fed -> serve: bank the exported adapters ------------------------------
+bank = AdapterBank.from_fed_results(results)
+print(f"bank: {bank.n_adapters} adapters, "
+      f"{bank.nbytes_resident / 1024:.0f} KB device-resident")
+
+engine = ServeEngine(cfg, {"backbone": backbone}, batch_slots=4,
+                     max_len=256, seed=0, bank=bank)
 
 workload = [
-    Request(prompt=[5, 9, 13], max_new_tokens=12),                   # greedy
-    Request(prompt=[40, 2], max_new_tokens=20, temperature=0.8, top_k=40),
-    Request(prompt=list(range(50, 66)), max_new_tokens=8),
-    Request(prompt=[7, 7, 7], max_new_tokens=16, temperature=1.2, top_k=20),
-    Request(prompt=[100, 101], max_new_tokens=10),
-    Request(prompt=[3], max_new_tokens=24, temperature=0.5, top_k=10),
+    Request(prompt=[5, 9, 13], max_new_tokens=12, adapter=0),       # greedy
+    Request(prompt=[5, 9, 13], max_new_tokens=12, adapter=1),       # same
+    #   prompt, other tenant's adapter -> different continuation
+    Request(prompt=[40, 2], max_new_tokens=20, adapter=1,
+            temperature=0.8, top_k=40),
+    Request(prompt=list(range(50, 66)), max_new_tokens=8, adapter=0),
+    Request(prompt=[7, 7, 7], max_new_tokens=16, adapter=1,
+            temperature=1.2, top_k=20),
+    Request(prompt=[100, 101], max_new_tokens=10, adapter=0),
 ]
 for r in workload:
     engine.submit(r)
@@ -34,11 +72,14 @@ t0 = time.time()
 steps = engine.run_until_done()
 dt = time.time() - t0
 total_tokens = sum(len(g) for _, g in engine.finished)
-print(f"served {len(engine.finished)} requests in {steps} engine steps "
-      f"({dt:.1f}s, {total_tokens/dt:.1f} tok/s on CPU)")
+print(f"served {len(engine.finished)} requests ({bank.n_adapters} tenants) "
+      f"in {steps} engine steps ({dt:.1f}s, {total_tokens/dt:.1f} tok/s on CPU)")
 for req, gen in sorted(engine.finished, key=lambda x: x[0].uid):
     mode = "greedy" if req.temperature == 0 else f"T={req.temperature},k={req.top_k}"
-    print(f"  req {req.uid} [{mode:12s}] prompt_len={len(req.prompt):2d} "
-          f"-> {gen[:8]}{'...' if len(gen) > 8 else ''}")
+    print(f"  req {req.uid} [adapter {req.adapter}] [{mode:12s}] "
+          f"prompt_len={len(req.prompt):2d} -> {gen[:8]}"
+          f"{'...' if len(gen) > 8 else ''}")
 assert len(engine.finished) == len(workload)
+gens = {r.uid: g for r, g in engine.finished}
+assert gens[0] != gens[1], "tenants' adapters should diverge on one prompt"
 print("OK")

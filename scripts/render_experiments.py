@@ -3,6 +3,7 @@ EXPERIMENTS.md tables.
 
     PYTHONPATH=src python scripts/render_experiments.py kernel   # §Perf kernel table
     PYTHONPATH=src python scripts/render_experiments.py round    # §Perf round-throughput table
+    PYTHONPATH=src python scripts/render_experiments.py serve    # §Perf serve-throughput table
     PYTHONPATH=src python scripts/render_experiments.py all      # roofline + hillclimb
 """
 
@@ -111,6 +112,36 @@ def round_table(path="BENCH_round.json"):
     return "\n".join(lines)
 
 
+def serve_table(path="BENCH_serve.json"):
+    """The EXPERIMENTS.md §Perf serve-throughput table (tokens/sec for the
+    banked multi-tenant engine vs sequential per-adapter serving)."""
+    with open(path) as f:
+        data = json.load(f)
+    meta = data["meta"]
+    by = {}
+    for r in data["results"]:
+        by.setdefault((r["adapters"], r["slots"], r["sampling"]), {})[
+            r["engine"]] = r
+    lines = [f"Measured on backend=`{meta['backend']}`, "
+             f"config=`{meta['config']}`, prompt_len={meta['prompt_len']}, "
+             f"max_new={meta['max_new_tokens']}, reps={meta['reps']}.",
+             "",
+             "| adapters | slots | sampling | engine | steps | tok/s | "
+             "x vs sequential |",
+             "|---|---|---|---|---|---|---|"]
+    for (a, s, samp), group in sorted(by.items()):
+        seq_tps = group.get("sequential", {}).get("tokens_per_sec")
+        for eng in ("sequential", "banked"):
+            if eng not in group:
+                continue
+            r = group[eng]
+            speed = (f"{r['tokens_per_sec'] / seq_tps:.1f}x"
+                     if seq_tps else "—")
+            lines.append(f"| {a} | {s} | {samp} | {eng} | {r['steps']} | "
+                         f"{r['tokens_per_sec']:.1f} | {speed} |")
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
     if which == "kernel":
@@ -120,6 +151,10 @@ if __name__ == "__main__":
     if which == "round":
         print(round_table(sys.argv[2] if len(sys.argv) > 2
                           else "BENCH_round.json"))
+        sys.exit(0)
+    if which == "serve":
+        print(serve_table(sys.argv[2] if len(sys.argv) > 2
+                          else "BENCH_serve.json"))
         sys.exit(0)
     if which in ("all", "sp"):
         print("### Single-pod (16x16)\n")

@@ -21,6 +21,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.compat import shard_map_compat
 from repro.core.tt import TTSpec, make_tt_spec, tt_init, tt_matvec, tt_svd
 
 
@@ -147,8 +148,8 @@ def adapter_apply_sharded(params: dict, spec: "AdapterSpec", x: jax.Array,
         delta = _expand_output_cores(pp["up"][up.split + 1:], tu)
         return x_loc + delta.reshape(bl, sl, d_loc)
 
-    return jax.shard_map(local_fn, mesh=mesh, in_specs=(fspec, xspec),
-                         out_specs=xspec, check_vma=False)(params, x)
+    return shard_map_compat(local_fn, mesh=mesh, in_specs=(fspec, xspec),
+                            out_specs=xspec)(params, x)
 
 
 def adapter_apply(params: dict, spec: AdapterSpec, x: jax.Array,
@@ -186,6 +187,25 @@ def adapter_apply(params: dict, spec: AdapterSpec, x: jax.Array,
         _, yc = jax.lax.scan(lambda _, c: (None, delta(c)), None, xc)
         return x + yc.transpose(1, 0, 2, 3).reshape(b, s, d)
     return x + delta(x)
+
+
+def adapter_apply_banked(bank: dict, spec: AdapterSpec, x: jax.Array,
+                         adapter_id: jax.Array) -> jax.Array:
+    """Multi-tenant serving path (DESIGN.md §10): ``bank`` is a tensorized
+    adapter whose factor leaves carry a leading bank axis (A, ...);
+    ``adapter_id`` (B,) selects one adapter per leading batch row of x.
+
+    Residual included, like :func:`adapter_apply`.  With ``use_kernel`` the
+    fused banked Pallas kernel selects factors per row inside VMEM; otherwise
+    the gather+vmap jnp oracle (kernels/ref.py) runs -- both give one decode
+    step that serves B rows hitting B different adapters."""
+    if spec.use_kernel:
+        from repro.kernels.ops import tt_adapter_banked
+        return x + tt_adapter_banked(bank["down"], bank["up"], spec.down,
+                                     spec.up, x, adapter_id)
+    from repro.kernels.ref import tt_adapter_banked_ref
+    return x + tt_adapter_banked_ref(bank["down"], bank["up"], spec.down,
+                                     spec.up, x, adapter_id)
 
 
 # ---------------------------------------------------------------------------

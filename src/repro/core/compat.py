@@ -1,0 +1,24 @@
+"""Version-compat shims for the pinned JAX.
+
+One home for the JAX-pin workarounds so call sites (core/adapters.py,
+models/moe.py) cannot drift when the pin moves.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """``jax.shard_map`` on new JAX; the experimental module (with its
+    ``check_rep`` spelling of ``check_vma``) on the pinned version -- same
+    fallback as tests/test_substrate.py."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+__all__ = ["shard_map_compat"]

@@ -58,6 +58,29 @@ class FedResult:
     #: round index of each acc_history entry (eval_every > 1 evaluates a
     #: subset of rounds; the final round is always included)
     eval_rounds: list | None = None
+    #: the FROZEN backbone the adapters were trained against (a reference to
+    #: the session's pytree, not a copy).  Serving must compose the exported
+    #: adapters with THIS backbone; per-tenant banking (AdapterBank) assumes
+    #: all tenants fine-tuned the same foundation model, i.e. sessions with
+    #: the same ``seed`` (which derives the backbone init).
+    backbone: dict | None = None
+
+    def export_adapter(self) -> dict:
+        """fed -> serve export: the aggregated PEFT pytree in the layout
+        :class:`repro.serve.bank.AdapterBank` expects (``{"blocks": ...}``
+        with per-layer-stacked leaves).  One federated run = one tenant's
+        adapter; bank N results with ``AdapterBank.from_fed_results`` and
+        serve them on :attr:`backbone`."""
+        if self.trainable is None:
+            raise ValueError("run() did not retain the trainable pytree")
+        peft = self.trainable.get("peft")
+        # bitfit/none yield {"blocks": {}} -- empty blocks are as unservable
+        # as missing ones
+        if not peft or not peft.get("blocks"):
+            raise ValueError(
+                "this strategy trains no per-block PEFT params to serve "
+                "(e.g. bitfit/none) -- nothing to export")
+        return peft
 
 
 @dataclasses.dataclass(frozen=True)
@@ -253,7 +276,8 @@ class FedSession:
                          n_communicated_round0=n_comm0,
                          best_acc=max(acc_history),
                          trainable=global_trainable,
-                         eval_rounds=eval_rounds)
+                         eval_rounds=eval_rounds,
+                         backbone=self.backbone)
 
 
 __all__ = ["FedResult", "FedSession", "LocalDP"]

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 from repro.core.tt import TTSpec
 from repro.kernels import ref
-from repro.kernels.tt_contract import (tt_adapter_bwd_kernel,
+from repro.kernels.tt_contract import (tt_adapter_banked_kernel,
+                                       tt_adapter_bwd_kernel,
                                        tt_adapter_kernel,
                                        tt_linear_bwd_kernel, tt_linear_kernel)
 
@@ -98,6 +99,47 @@ def select_block_b(*specs: TTSpec) -> int:
             raise ValueError(f"invalid REPRO_TT_BLOCK_B={env!r}: must be > 0")
         return block_b
     return _select_block_b(*specs)
+
+
+def _check_bank_budget(n_adapters: int, *specs: TTSpec) -> int:
+    """VMEM bytes left after the whole (A, ...) bank goes resident; raises
+    the actionable error when the bank ALONE blows the budget (no block size
+    -- env-forced or not -- can help)."""
+    bank_bytes = 4 * n_adapters * sum(s.n_params for s in specs)
+    budget = _VMEM_BUDGET_BYTES - bank_bytes
+    if budget <= 0:
+        raise ValueError(
+            f"adapter bank of {n_adapters} adapters "
+            f"({bank_bytes / 2**20:.1f} MiB of TT factors) does not fit the "
+            f"kernel VMEM budget ({_VMEM_BUDGET_BYTES / 2**20:.0f} MiB): "
+            "page the bank (AdapterBank(max_resident=...)) or serve via the "
+            "jnp path (use_kernel=False)")
+    return budget
+
+
+@lru_cache(maxsize=None)
+def _select_block_b_banked(n_adapters: int, *specs: TTSpec) -> int:
+    """Banked variant of the block table: the whole (A, ...) factor bank is
+    VMEM-resident every grid step, and each batch row additionally holds its
+    (A,) one-hot selector plus the per-row gathered factor matrices -- all
+    A-dependent costs the plain table ignores.  Forward-only, so no x2 for
+    backward cotangent mirrors."""
+    budget = _check_bank_budget(n_adapters, *specs)
+    per_row = (sum(_chain_row_floats(s) for s in specs) + n_adapters
+               + sum(s.n_params for s in specs))
+    for cand in _BLOCK_CANDIDATES:
+        if 4 * cand * per_row <= budget:
+            return cand
+    # big spec, small bank: degrade to the smallest block like the plain table
+    return _BLOCK_CANDIDATES[-1]
+
+
+def select_block_b_banked(n_adapters: int, *specs: TTSpec) -> int:
+    if os.environ.get("REPRO_TT_BLOCK_B"):
+        # env forces the block size but never waives bank-fits-VMEM
+        _check_bank_budget(n_adapters, *specs)
+        return select_block_b(*specs)
+    return _select_block_b_banked(n_adapters, *specs)
 
 
 @lru_cache(maxsize=None)
@@ -173,6 +215,44 @@ def tt_adapter_fused(down: Sequence[jax.Array], up: Sequence[jax.Array],
                      spec_down: TTSpec, spec_up: TTSpec,
                      x: jax.Array) -> jax.Array:
     return _tt_adapter(x, tuple(down), tuple(up), spec_down, spec_up)
+
+
+@lru_cache(maxsize=None)
+def _adapter_banked_call(spec_down: TTSpec, spec_up: TTSpec, n_adapters: int,
+                         block_b: int, interpret: bool):
+    return tt_adapter_banked_kernel(spec_down, spec_up, n_adapters, block_b,
+                                    interpret)
+
+
+def tt_adapter_banked(down: Sequence[jax.Array], up: Sequence[jax.Array],
+                      spec_down: TTSpec, spec_up: TTSpec, x: jax.Array,
+                      adapter_id: jax.Array) -> jax.Array:
+    """Multi-tenant fused adapter delta: per-row factor selection from a
+    stacked bank (factors (A, ...); adapter_id (B,) indexes the leading batch
+    axis of x).  Forward-only -- the bank is the frozen OUTPUT of federated
+    fine-tuning, served, never trained (train-time code uses
+    ``tt_adapter_fused``).  Padding rows get an all-zero selector, so their
+    chain -- and output -- is exactly zero before being dropped."""
+    down, up = tuple(down), tuple(up)
+    n_adapters = down[0].shape[0]
+    batch_shape = x.shape[:-1]
+    if not batch_shape or adapter_id.shape != (batch_shape[0],):
+        raise ValueError(
+            f"adapter_id shape {adapter_id.shape} must be one id per leading "
+            f"batch row of x {x.shape}")
+    # out-of-range ids clamp, matching the ref path's jit gather semantics
+    # (one_hot would instead yield a zero row -> adapter silently skipped)
+    adapter_id = jnp.clip(adapter_id, 0, n_adapters - 1)
+    sel = jax.nn.one_hot(adapter_id, n_adapters, dtype=x.dtype)
+    sel = sel.reshape((batch_shape[0],) + (1,) * (len(batch_shape) - 1)
+                      + (n_adapters,))
+    sel = jnp.broadcast_to(sel, batch_shape + (n_adapters,))
+    block_b = select_block_b_banked(n_adapters, spec_down, spec_up)
+    xf, _, b = _flatten_pad(x, spec_down.in_dim, block_b)
+    sf, _, _ = _flatten_pad(sel, n_adapters, block_b)
+    y = _adapter_banked_call(spec_down, spec_up, n_adapters, block_b,
+                             _interpret())(xf, sf, down, up)
+    return y[:b].reshape(batch_shape + (spec_up.out_dim,))
 
 
 @partial(jax.custom_vjp, nondiff_argnums=(3, 4))

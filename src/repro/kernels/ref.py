@@ -29,3 +29,21 @@ def tt_adapter_ref(down: Sequence[jax.Array], up: Sequence[jax.Array],
     h = tt_matvec(down, spec_down, x)
     h = jax.nn.gelu(h)
     return tt_matvec(up, spec_up, h)
+
+
+def tt_adapter_banked_ref(down: Sequence[jax.Array], up: Sequence[jax.Array],
+                          spec_down: TTSpec, spec_up: TTSpec,
+                          x: jax.Array, adapter_id: jax.Array) -> jax.Array:
+    """Multi-tenant adapter-delta oracle: factors carry a leading bank axis
+    (A, ...); ``adapter_id`` (B,) selects one adapter per leading batch row
+    of x (B, ..., in_dim).  Gather each row's factor chain from the stacks
+    and vmap the per-row contraction -- the parity reference for the fused
+    banked Pallas kernel (tt_contract.tt_adapter_banked_kernel)."""
+
+    def one(xi, d_row, u_row):
+        h = tt_matvec(d_row, spec_down, xi)
+        return tt_matvec(u_row, spec_up, jax.nn.gelu(h))
+
+    d_rows = [f[adapter_id] for f in down]
+    u_rows = [f[adapter_id] for f in up]
+    return jax.vmap(one)(x, d_rows, u_rows)

@@ -208,6 +208,105 @@ def tt_adapter_kernel(spec_down: TTSpec, spec_up: TTSpec, block_b: int,
 
 
 # ---------------------------------------------------------------------------
+# Banked forward kernel (multi-tenant serving)
+# ---------------------------------------------------------------------------
+
+
+def tt_chain_fwd_banked(x, sel, factors: list, spec: TTSpec):
+    """Per-row banked contraction chain.
+
+    factors[j]: (A, r_in, k_j, r_out) -- the whole adapter bank stacked on a
+    leading axis; sel: (TB, A) one-hot row selector.  Every batch row
+    contracts against ITS OWN adapter's factor chain: each step first picks
+    the per-row factor matrices with one (TB, A) @ (A, r_in*k*r_out) GEMM
+    (the bank is tiny -- rank-5 TT factors -- so this gather-as-GEMM costs
+    less than a single fold step), then runs the fold/expand as a batched
+    rank-3 contraction over the row dimension.
+    """
+    tb = x.shape[0]
+    a = spec.split
+    in_dims = spec.core_dims[:a]
+
+    def select(g):
+        A = g.shape[0]
+        gb = jnp.dot(sel, g.reshape((A, -1)),
+                     preferred_element_type=jnp.float32)
+        return gb.reshape((tb,) + g.shape[1:])             # (TB, r_in, k, r_out)
+
+    t = x.reshape((tb, 1) + tuple(in_dims))               # (TB, r0=1, k_1..k_a)
+    for j in range(a):
+        gb = select(factors[j])
+        _, r_in, k, r_out = gb.shape
+        rest = math.prod(in_dims[j + 1:]) if j + 1 < a else 1
+        lhs = t.reshape((tb, r_in, k, rest)).transpose((0, 3, 1, 2))
+        lhs = lhs.reshape((tb, rest, r_in * k))
+        t = jax.lax.dot_general(lhs, gb.reshape((tb, r_in * k, r_out)),
+                                (((2,), (1,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+        t = t.transpose((0, 2, 1))                        # (TB, r_out, rest)
+    t = t.reshape((tb, 1, factors[a - 1].shape[-1]))      # (TB, 1, r_a)
+
+    for j in range(a, spec.order):
+        gb = select(factors[j])
+        _, r_in, k, r_out = gb.shape
+        pre = t.shape[1]
+        t = jax.lax.dot_general(t, gb.reshape((tb, r_in, k * r_out)),
+                                (((2,), (1,)), ((0,), (0,))),
+                                preferred_element_type=jnp.float32)
+        t = t.reshape((tb, pre * k, r_out))
+    return t.reshape((tb, spec.out_dim))
+
+
+def tt_adapter_banked_kernel(spec_down: TTSpec, spec_up: TTSpec,
+                             n_adapters: int, block_b: int, interpret: bool):
+    """Fused MULTI-TENANT adapter delta: TT_up(gelu(TT_down(x))) where every
+    batch row selects its own adapter from a stacked bank.
+
+    The whole bank ((A, ...) factors -- A rank-5 adapters are still only a
+    few hundred KB) is VMEM-resident for every grid step; activations stream
+    through in (BLOCK_B, in_dim) tiles paired with a (BLOCK_B, A) one-hot
+    selector.  This is what lets one jitted decode step serve B concurrent
+    requests hitting B different fine-tuned adapters with zero recompilation
+    and zero host-side weight swapping (DESIGN.md §10).
+    """
+    n_down = spec_down.order
+    n_up = spec_up.order
+
+    def kernel(*refs):
+        x_ref, s_ref = refs[0], refs[1]
+        d_refs = refs[2:2 + n_down]
+        u_refs = refs[2 + n_down:2 + n_down + n_up]
+        o_ref = refs[-1]
+        x = x_ref[...]
+        sel = s_ref[...]
+        h = tt_chain_fwd_banked(x, sel, [f[...] for f in d_refs], spec_down)
+        h = jax.nn.gelu(h.astype(jnp.float32))
+        y = tt_chain_fwd_banked(h.astype(x.dtype), sel,
+                                [f[...] for f in u_refs], spec_up)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+    def call(x: jax.Array, sel: jax.Array, down: Sequence[jax.Array],
+             up: Sequence[jax.Array]) -> jax.Array:
+        b = x.shape[0]
+        assert b % block_b == 0, (b, block_b)
+        grid = (b // block_b,)
+        in_specs = [pl.BlockSpec((block_b, spec_down.in_dim), lambda i: (i, 0)),
+                    pl.BlockSpec((block_b, n_adapters), lambda i: (i, 0))]
+        for f in list(down) + list(up):
+            in_specs.append(pl.BlockSpec(f.shape, lambda i, n=f.ndim: (0,) * n))
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_b, spec_up.out_dim), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, spec_up.out_dim), x.dtype),
+            interpret=interpret,
+        )(x, sel, *down, *up)
+
+    return call
+
+
+# ---------------------------------------------------------------------------
 # Backward kernels
 # ---------------------------------------------------------------------------
 

@@ -26,6 +26,7 @@ import numpy as np
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.core.compat import shard_map_compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -268,8 +269,8 @@ def moe_apply(p: dict, cfg: ModelConfig, x: jax.Array,
         aux = jax.lax.pmean(aux, maxis)
         return y.reshape(bl, s, d), aux
 
-    y, aux = jax.shard_map(
+    y, aux = shard_map_compat(
         local_fn, mesh=mesh, in_specs=(wspec, xspec),
-        out_specs=(xspec, P()), check_vma=False,
+        out_specs=(xspec, P()),
     )(p, x)
     return y, jnp.mean(aux)

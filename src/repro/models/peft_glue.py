@@ -53,14 +53,26 @@ def block_peft_init(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32,
 
 
 def apply_hook(peft: dict | None, cfg: ModelConfig, name: str, x: jax.Array,
-               dist=None) -> jax.Array:
-    """Apply the post-attn / post-mlp adapter hook, if populated."""
+               dist=None, adapter_id: jax.Array | None = None) -> jax.Array:
+    """Apply the post-attn / post-mlp adapter hook, if populated.
+
+    With ``adapter_id`` (B,) the peft leaves are expected to carry a leading
+    bank axis (A, ...) -- the multi-tenant serving path (serve/bank.py):
+    every batch row is contracted against its own adapter's factors."""
     if not peft or name not in peft:
         return x
     m = cfg.peft.method
     if m in ("fedtt", "fedtt_plus"):
+        if adapter_id is not None:
+            from repro.core.adapters import adapter_apply_banked
+            return adapter_apply_banked(peft[name], adapter_spec(cfg), x,
+                                        adapter_id)
         return adapter_apply(peft[name], adapter_spec(cfg), x, dist=dist)
     if m == "adapter":
+        if adapter_id is not None:
+            raise NotImplementedError(
+                "adapter banks support tensorized (fedtt/fedtt_plus) "
+                "adapters only")
         return dense_adapter_apply(peft[name], x)
     return x
 

@@ -374,11 +374,11 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.float32,
 
 
 def _attn_decode_block(bp, peft_b, cfg, x, pos, cache_l, window, img_kv=None,
-                       dist=None):
+                       dist=None, adapter_id=None):
     h = rmsnorm(x, bp["ln1"], cfg.norm_eps)
     y, new_cache = attn_decode(bp["attn"], cfg, h, pos, cache_l, window, peft=peft_b)
     h = x + y
-    h = apply_hook(peft_b, cfg, "adapter_attn", h)
+    h = apply_hook(peft_b, cfg, "adapter_attn", h, adapter_id=adapter_id)
     if img_kv is not None:
         xp, ik, iv = img_kv
         hq = rmsnorm(h, xp["ln"], cfg.norm_eps)
@@ -396,14 +396,20 @@ def _attn_decode_block(bp, peft_b, cfg, x, pos, cache_l, window, img_kv=None,
     else:
         m = mlp_apply(bp["mlp"], cfg, hn)
     h = h + m
-    h = apply_hook(peft_b, cfg, "adapter_mlp", h)
+    h = apply_hook(peft_b, cfg, "adapter_mlp", h, adapter_id=adapter_id)
     return h, new_cache
 
 
 def model_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                       pos: jax.Array, cache: dict, *,
-                      dist: DistContext | None = None) -> tuple[jax.Array, dict]:
+                      dist: DistContext | None = None,
+                      adapter_id: jax.Array | None = None
+                      ) -> tuple[jax.Array, dict]:
     """tokens: (B,) int32 new token; pos: (B,) absolute positions.
+
+    With ``adapter_id`` (B,) the peft blocks are a stacked adapter BANK
+    (leaves (L, A, ...)); each slot's hidden state runs through its own
+    adapter's TT factors (multi-tenant serving, DESIGN.md §10).
 
     Returns (logits (B, vocab), new cache)."""
     bb, peft = params["backbone"], params.get("peft", {})
@@ -418,7 +424,7 @@ def model_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
             hn = rmsnorm(h, bp["ln"], cfg.norm_eps)
             y, nc = mamba.mamba_decode(bp["mixer"], cfg, hn, c)
             h = h + y
-            h = apply_hook(pb, cfg, "adapter_mlp", h)
+            h = apply_hook(pb, cfg, "adapter_mlp", h, adapter_id=adapter_id)
             return h, nc
         x, new_cache = jax.lax.scan(body, x, (bb["blocks"], peft_blocks, cache))
         cache = new_cache
@@ -442,12 +448,13 @@ def model_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 hn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
                 y, nc = rglru.rglru_decode(bp["rec"], cfg, hn, _take(rc_g, j))
                 h = h + y
-                h = apply_hook(pb, cfg, "adapter_attn", h)
+                h = apply_hook(pb, cfg, "adapter_attn", h, adapter_id=adapter_id)
                 h = h + mlp_apply(bp["mlp"], cfg, rmsnorm(h, bp["ln2"], cfg.norm_eps))
-                h = apply_hook(pb, cfg, "adapter_mlp", h)
+                h = apply_hook(pb, cfg, "adapter_mlp", h, adapter_id=adapter_id)
                 ncs.append(nc)
             h, nac = _attn_decode_block(attn_g, _take(pf_g, k - 1) if pf_g else None,
-                                        cfg, h, pos, ac, hy.local_window, dist=dist)
+                                        cfg, h, pos, ac, hy.local_window, dist=dist,
+                                        adapter_id=adapter_id)
             rec_new = jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
             return h, (rec_new, nac)
         x, (rec_new, attn_new) = jax.lax.scan(
@@ -462,9 +469,9 @@ def model_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                 hn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
                 y, nc = rglru.rglru_decode(bp["rec"], cfg, hn, c)
                 h = h + y
-                h = apply_hook(pb, cfg, "adapter_attn", h)
+                h = apply_hook(pb, cfg, "adapter_attn", h, adapter_id=adapter_id)
                 h = h + mlp_apply(bp["mlp"], cfg, rmsnorm(h, bp["ln2"], cfg.norm_eps))
-                h = apply_hook(pb, cfg, "adapter_mlp", h)
+                h = apply_hook(pb, cfg, "adapter_mlp", h, adapter_id=adapter_id)
                 return h, nc
             x, rem_new = jax.lax.scan(rem_body, x, (bb["rem_blocks"], rem_pf, rem_cache))
             rec_flat = jax.tree.map(lambda a, b: jnp.concatenate([a, b]), rec_flat, rem_new)
@@ -487,7 +494,8 @@ def model_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
                     img_kv = (xblk, ik, iv) if j == kx - 1 else None
                     h, nc = _attn_decode_block(
                         _take(blk_g, j), _take(pf_g, j) if pf_g else None, cfg, h,
-                        pos, _take(c_g, j), window, img_kv=img_kv, dist=dist)
+                        pos, _take(c_g, j), window, img_kv=img_kv, dist=dist,
+                        adapter_id=adapter_id)
                     ncs.append(nc)
                 return h, jax.tree.map(lambda *xs: jnp.stack(xs), *ncs)
             x, new_kv = jax.lax.scan(
@@ -497,7 +505,8 @@ def model_decode_step(params: dict, cfg: ModelConfig, tokens: jax.Array,
         else:
             def body(h, xs):
                 bp, pb, c = xs
-                h, nc = _attn_decode_block(bp, pb, cfg, h, pos, c, window, dist=dist)
+                h, nc = _attn_decode_block(bp, pb, cfg, h, pos, c, window,
+                                           dist=dist, adapter_id=adapter_id)
                 return h, nc
             x, cache = jax.lax.scan(body, x, (bb["blocks"], peft_blocks, cache))
 

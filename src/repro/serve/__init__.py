@@ -1,3 +1,4 @@
+from repro.serve.bank import AdapterBank
 from repro.serve.engine import Request, ServeEngine
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["AdapterBank", "Request", "ServeEngine"]

@@ -1,0 +1,147 @@
+"""Device-resident adapter bank for multi-tenant TT-adapter serving.
+
+FedTT's tensorized adapters are ~10x smaller on the wire than LoRA deltas
+(paper Table 1), so the OUTPUT of federated fine-tuning -- one adapter set
+per client/silo -- is small enough that hundreds of them co-reside on one
+accelerator.  The bank stacks every adapter's TT factors on a leading axis A
+(leaves ``(A, L, ...)``): the jitted decode step gathers per-slot factors by
+``adapter_id`` inside the kernel, so B concurrent requests hit B different
+fine-tuned models with zero recompilation and zero host-side weight
+swapping (DESIGN.md §10).
+
+When A exceeds the device budget, the bank keeps only ``max_resident``
+adapters on device and pages the rest in from a host copy on demand (LRU
+eviction, never evicting an adapter pinned by an active slot).  A page-in
+moves one adapter's TT factors -- kilobytes, not the model -- which is why
+per-slot gather beats host weight swaps even under paging.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _peft_blocks(adapter: dict) -> dict:
+    """Extract + validate the banked-servable block pytree from a peft dict
+    (as produced by ``model_init(...)['peft']`` / ``FedResult.export_adapter``)."""
+    if "prompt" in adapter:
+        raise ValueError("prompt-tuning peft cannot be banked (soft tokens "
+                         "change the sequence length, not a per-block hook)")
+    blocks = adapter.get("blocks", adapter)
+    if not isinstance(blocks, dict) or "adapter_attn" not in blocks:
+        raise ValueError(
+            "AdapterBank expects fedtt/fedtt_plus peft blocks "
+            "({'adapter_attn': ..., 'adapter_mlp': ...}); got keys "
+            f"{list(blocks) if isinstance(blocks, dict) else type(blocks)}")
+    if "down" not in blocks["adapter_attn"]:
+        raise ValueError("AdapterBank supports tensorized (TT) adapters only "
+                         "-- adapter_attn has no TT 'down' factors")
+    return blocks
+
+
+class AdapterBank:
+    """A stacked bank of per-tenant TT adapters, resident on device.
+
+    ``adapters``: list of peft pytrees (each ``{"blocks": ...}`` with leaves
+    ``(L, ...)``, all structurally identical).  ``max_resident`` bounds how
+    many live on device at once (None/A = all resident, no paging).
+
+    ``blocks`` holds the device stack with leaves ``(R, L, ...)`` where
+    R = max_resident; ``acquire(adapter_id, pinned)`` returns the resident
+    row serving that adapter, paging it in (and bumping ``page_ins``) when
+    absent.  The engine passes resident rows -- not adapter ids -- into the
+    jitted step, so paging never changes traced shapes.
+    """
+
+    def __init__(self, adapters: list, max_resident: int | None = None):
+        if not adapters:
+            raise ValueError("empty adapter list")
+        blocks = [_peft_blocks(a) for a in adapters]
+        host = jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                            *blocks)                       # leaves (A, L, ...)
+        self.n_adapters = len(blocks)
+        self.max_resident = (self.n_adapters if max_resident is None
+                             else int(max_resident))
+        if not 0 < self.max_resident <= self.n_adapters:
+            raise ValueError(f"max_resident={max_resident} out of range "
+                             f"(1..{self.n_adapters})")
+        self.page_ins = 0
+        if self.max_resident == self.n_adapters:
+            self._host = None                              # fully resident
+            self.blocks = jax.tree.map(jnp.asarray, host)
+        else:
+            self._host = host
+            self.blocks = jax.tree.map(
+                lambda h: jnp.asarray(h[: self.max_resident]), host)
+        #: resident row -> adapter id, in LRU order bookkeeping below
+        self._resident = list(range(self.max_resident))
+        self._lru = list(range(self.max_resident))         # front = LRU row
+
+    # ------------------------------------------------------------------
+    @property
+    def paged(self) -> bool:
+        return self._host is not None
+
+    @property
+    def nbytes_resident(self) -> int:
+        """Device bytes held by the resident stack (the 'adapter-bank memory
+        model' number in DESIGN.md §10)."""
+        return sum(leaf.nbytes for leaf in jax.tree.leaves(self.blocks))
+
+    def resident_adapters(self) -> list:
+        return list(self._resident)
+
+    # ------------------------------------------------------------------
+    def _touch(self, row: int) -> None:
+        self._lru.remove(row)
+        self._lru.append(row)
+
+    def acquire(self, adapter_id: int, pinned=frozenset()) -> int | None:
+        """Resident row serving ``adapter_id``, paging it in if needed.
+
+        ``pinned`` is the set of rows bound to active slots -- never evicted.
+        Returns None when every candidate victim is pinned (the caller defers
+        the request until a slot frees)."""
+        if not 0 <= adapter_id < self.n_adapters:
+            raise ValueError(f"adapter_id {adapter_id} out of range "
+                             f"(bank holds {self.n_adapters})")
+        if not self.paged:
+            return adapter_id
+        if adapter_id in self._resident:
+            row = self._resident.index(adapter_id)
+            self._touch(row)
+            return row
+        victims = [r for r in self._lru if r not in pinned]
+        if not victims:
+            return None
+        row = victims[0]
+        self.blocks = jax.tree.map(
+            lambda d, h: d.at[row].set(jnp.asarray(h[adapter_id])),
+            self.blocks, self._host)
+        self._resident[row] = adapter_id
+        self._touch(row)
+        self.page_ins += 1
+        return row
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def from_fed_results(cls, results, max_resident: int | None = None
+                         ) -> "AdapterBank":
+        """fed -> serve export: bank the aggregated adapters of N federated
+        runs (one :class:`repro.fed.api.FedResult` per tenant/silo)."""
+        return cls([r.export_adapter() for r in results],
+                   max_resident=max_resident)
+
+    @classmethod
+    def from_checkpoints(cls, paths, like: dict,
+                         max_resident: int | None = None) -> "AdapterBank":
+        """Bank adapters from npz checkpoints of per-tenant peft pytrees
+        (``train/checkpoint.py``); ``like`` gives the pytree structure."""
+        from repro.train import checkpoint
+        return cls([checkpoint.restore(p, like) for p in paths],
+                   max_resident=max_resident)
+
+
+__all__ = ["AdapterBank"]

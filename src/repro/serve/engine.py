@@ -6,6 +6,12 @@ token per step -- piggyback prefill) or a *decode* phase (sampling).  When a
 slot finishes its request, the host swaps in the next queued request and
 resets that slot's cache lanes; the jitted step never recompiles.
 
+Multi-tenant mode (DESIGN.md §10): pass an :class:`~repro.serve.bank.AdapterBank`
+and per-request ``adapter`` ids -- the decode step gathers each slot's TT
+adapter from the device-resident bank, so concurrent requests hit different
+fine-tuned adapters in the SAME batch with zero recompilation and zero
+host-side weight swapping.
+
 Sampling: greedy, temperature, or top-k (per-request).
 """
 
@@ -20,6 +26,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.models.transformer import init_cache, model_decode_step
+from repro.serve.bank import AdapterBank
 
 
 @dataclasses.dataclass
@@ -28,6 +35,7 @@ class Request:
     max_new_tokens: int = 32
     temperature: float = 0.0          # 0 => greedy
     top_k: int = 0                    # 0 => full softmax
+    adapter: int = 0                  # bank adapter id (engines with a bank)
     uid: int = -1
 
     def __post_init__(self):
@@ -39,6 +47,7 @@ class _Slot:
     req: Request | None = None
     prompt_pos: int = 0
     generated: list = dataclasses.field(default_factory=list)
+    adapter_row: int = 0              # resident bank row while active
 
     @property
     def prefilling(self) -> bool:
@@ -52,9 +61,21 @@ class _Slot:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: dict, batch_slots: int = 4,
-                 max_len: int = 512, seed: int = 0):
+                 max_len: int = 512, seed: int = 0,
+                 bank: AdapterBank | None = None):
         self.cfg = cfg
         self.params = params
+        self.bank = bank
+        if bank is not None:
+            if cfg.peft.method not in ("fedtt", "fedtt_plus"):
+                raise ValueError("adapter banks require a tensorized-adapter "
+                                 f"(fedtt/fedtt_plus) config, got peft method "
+                                 f"{cfg.peft.method!r}")
+            if bank.paged and bank.max_resident < batch_slots:
+                raise ValueError(
+                    f"bank.max_resident ({bank.max_resident}) must be >= "
+                    f"batch_slots ({batch_slots}) so every active slot can "
+                    "pin its adapter")
         self.b = batch_slots
         self.max_len = max_len
         self.key = jax.random.key(seed)
@@ -65,8 +86,21 @@ class ServeEngine:
         self._next_uid = 0
 
         @jax.jit
-        def _step(params, tokens, pos, cache, key, temps, topks, active):
-            logits, cache = model_decode_step(params, cfg, tokens, pos, cache)
+        def _step(params, bank_blocks, tokens, pos, cache, key, temps, topks,
+                  active, adapter_rows):
+            if bank_blocks is not None:
+                # bank leaves are (R, L, ...); the layer scan strips the
+                # leading axis, so present them as (L, R, ...) and let each
+                # layer gather per-slot factors by adapter_rows
+                peft = {"blocks": jax.tree.map(
+                    lambda a: jnp.swapaxes(a, 0, 1), bank_blocks)}
+                full = {"backbone": params["backbone"], "peft": peft}
+                logits, cache = model_decode_step(full, cfg, tokens, pos,
+                                                  cache,
+                                                  adapter_id=adapter_rows)
+            else:
+                logits, cache = model_decode_step(params, cfg, tokens, pos,
+                                                  cache)
             # per-slot sampling
             keys = jax.random.split(key, tokens.shape[0] + 1)
             step_keys, new_key = keys[:-1], keys[-1]
@@ -86,10 +120,26 @@ class ServeEngine:
         self._step = _step
 
     def submit(self, req: Request) -> int:
+        if self.bank is None:
+            if req.adapter != 0:
+                raise ValueError("request names an adapter but the engine "
+                                 "has no bank")
+        elif not 0 <= req.adapter < self.bank.n_adapters:
+            raise ValueError(f"adapter {req.adapter} out of range (bank "
+                             f"holds {self.bank.n_adapters})")
         req.uid = self._next_uid
         self._next_uid += 1
         self.queue.append(req)
         return req.uid
+
+    def swap_peft(self, peft: dict):
+        """Host-side weight swap: replace the (single) served adapter.  This
+        is the per-tenant serving baseline the bank makes unnecessary --
+        kept for the sequential engine benchmarked in bench_serve.py."""
+        if self.bank is not None:
+            raise ValueError("banked engines select adapters per slot; "
+                             "swap_peft is the no-bank baseline")
+        self.params = {**self.params, "peft": peft}
 
     def _zero_slot_cache(self, i: int):
         """Reset slot i's lanes (fresh request)."""
@@ -104,36 +154,52 @@ class ServeEngine:
     def _fill_slots(self):
         for i, s in enumerate(self.slots):
             if s.req is None and self.queue:
+                row = 0
+                if self.bank is not None:
+                    pinned = {t.adapter_row for t in self.slots
+                              if t.req is not None}
+                    row = self.bank.acquire(self.queue[0].adapter, pinned)
+                    # max_resident >= batch_slots (enforced in __init__) means
+                    # a free slot can always acquire: pinned covers at most
+                    # batch_slots - 1 of >= batch_slots resident rows
+                    assert row is not None
                 s.req = self.queue.pop(0)
                 s.prompt_pos = 0
                 s.generated = []
+                s.adapter_row = row
                 self._zero_slot_cache(i)
 
     def step(self) -> int:
         """One engine step for all slots.  Returns #completed requests."""
         self._fill_slots()
-        tokens, pos, temps, topks, active = [], [], [], [], []
+        tokens, pos, temps, topks, active, rows = [], [], [], [], [], []
         for s in self.slots:
+            rows.append(s.adapter_row)
             if s.req is None:
                 tokens.append(0), pos.append(0), temps.append(0.0)
                 topks.append(0), active.append(False)
                 continue
-            p = s.prompt_pos + len(s.generated)
             if s.prefilling:
                 tokens.append(s.req.prompt[s.prompt_pos])
+                pos.append(s.prompt_pos)
             else:
-                tokens.append(s.generated[-1] if s.generated
-                              else s.req.prompt[-1])
-            pos.append(p)
+                # generated is never empty here: the step that consumed the
+                # last prompt token appended the first generated token.  Its
+                # absolute position is prompt_pos + len(generated) - 1 --
+                # feeding it one later leaves a hole in the KV cache at
+                # position len(prompt) and shifts every decode rope angle.
+                tokens.append(s.generated[-1])
+                pos.append(s.prompt_pos + len(s.generated) - 1)
             temps.append(s.req.temperature)
             topks.append(s.req.top_k)
             active.append(True)
 
         sampled, self.cache, self.key = self._step(
-            self.params, jnp.asarray(tokens, jnp.int32),
+            self.params, self.bank.blocks if self.bank is not None else None,
+            jnp.asarray(tokens, jnp.int32),
             jnp.asarray(pos, jnp.int32), self.cache, self.key,
             jnp.asarray(temps, jnp.float32), jnp.asarray(topks, jnp.int32),
-            jnp.asarray(active))
+            jnp.asarray(active), jnp.asarray(rows, jnp.int32))
         sampled = np.asarray(sampled)
 
         completed = 0

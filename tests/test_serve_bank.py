@@ -1,0 +1,229 @@
+"""Multi-tenant TT-adapter serving: bank correctness, adapter isolation,
+paging, and the fed -> serve export path (DESIGN.md §10).
+
+The load-bearing properties:
+  * the fused banked kernel == gather+vmap oracle == per-adapter apply;
+  * slots bound to DIFFERENT adapters diverge on identical prompts, slots
+    bound to the SAME adapter (concurrent or reused) match token-for-token;
+  * an engine with a bank of one adapter equals the single-adapter engine
+    exactly;
+  * paging (max_resident < A) changes nothing about the outputs.
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import get_config
+from repro.core.adapters import (AdapterSpec, adapter_apply,
+                                 adapter_apply_banked, adapter_init)
+from repro.models.transformer import model_init
+from repro.serve import AdapterBank, Request, ServeEngine
+
+CFG = get_config("qwen3_4b", smoke=True)
+PROBE = [17, 23, 31]
+
+
+def _adapter_params(seed: int, spec: AdapterSpec) -> dict:
+    """One non-trivial adapter (zero-init output factors are perturbed so
+    distinct adapters actually compute distinct deltas)."""
+    p = adapter_init(jax.random.key(seed), spec)
+    return {"down": p["down"],
+            "up": [f + 0.05 * jax.random.normal(jax.random.key(100 + seed),
+                                                f.shape)
+                   for f in p["up"]]}
+
+
+def _perturbed_peft(seed: int) -> dict:
+    """A full per-model peft pytree with per-seed noise on every factor."""
+    base = model_init(jax.random.key(0), CFG)["peft"]
+    leaves, treedef = jax.tree.flatten(base)
+    keys = jax.random.split(jax.random.key(seed), len(leaves))
+    leaves = [l + 0.05 * jax.random.normal(k, l.shape)
+              for l, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, leaves)
+
+
+_BACKBONE = model_init(jax.random.key(0), CFG)["backbone"]
+
+
+def _bank_engine(pefts, slots=2, max_resident=None, seed=0):
+    bank = AdapterBank(pefts, max_resident=max_resident)
+    return ServeEngine(CFG, {"backbone": _BACKBONE}, batch_slots=slots,
+                       max_len=64, seed=seed, bank=bank)
+
+
+# ---------------------------------------------------------------------------
+# Kernel / oracle / per-adapter parity
+# ---------------------------------------------------------------------------
+
+def test_banked_kernel_matches_ref_and_per_adapter():
+    from repro.kernels.ops import tt_adapter_banked
+    from repro.kernels.ref import tt_adapter_banked_ref
+
+    spec = AdapterSpec(d_model=256, bottleneck=64, tt_rank=5)
+    adapters = [_adapter_params(a, spec) for a in range(3)]
+    bank = jax.tree.map(lambda *xs: jnp.stack(xs), *adapters)
+    x = jax.random.normal(jax.random.key(7), (5, 3, 256))
+    aid = jnp.array([0, 2, 1, 1, 0], jnp.int32)
+
+    ref = tt_adapter_banked_ref(bank["down"], bank["up"], spec.down, spec.up,
+                                x, aid)
+    ker = tt_adapter_banked(bank["down"], bank["up"], spec.down, spec.up,
+                            x, aid)
+    assert float(jnp.max(jnp.abs(ker - ref))) < 1e-5
+    # every row == the plain single-adapter apply with that row's factors
+    for i in range(x.shape[0]):
+        per = adapter_apply(adapters[int(aid[i])], spec, x[i]) - x[i]
+        assert float(jnp.max(jnp.abs(ref[i] - per))) < 1e-5
+
+
+def test_banked_block_size_accounts_for_bank():
+    """The banked kernel's block table must shrink as the VMEM-resident bank
+    grows, and refuse outright when the bank alone blows the budget (the
+    paging/jnp paths are the documented escapes)."""
+    from repro.kernels.ops import select_block_b_banked
+
+    spec = AdapterSpec(d_model=768, bottleneck=64, tt_rank=5)
+    # monotone nonincreasing in bank size (the bank + per-row selector and
+    # gathered factors all grow with A; no bwd-mirror x2 -- forward-only)
+    sizes = [select_block_b_banked(a, spec.down, spec.up)
+             for a in (4, 64, 256)]
+    assert sizes == sorted(sizes, reverse=True)
+    assert sizes[-1] < sizes[0]
+    with pytest.raises(ValueError):
+        select_block_b_banked(4096, spec.down, spec.up)
+
+
+def test_banked_apply_kernel_flag_parity():
+    spec_ref = AdapterSpec(d_model=256, bottleneck=64, tt_rank=5)
+    spec_ker = AdapterSpec(d_model=256, bottleneck=64, tt_rank=5,
+                           use_kernel=True)
+    adapters = [_adapter_params(a, spec_ref) for a in range(2)]
+    bank = jax.tree.map(lambda *xs: jnp.stack(xs), *adapters)
+    x = jax.random.normal(jax.random.key(3), (4, 2, 256))
+    aid = jnp.array([1, 0, 0, 1], jnp.int32)
+    y_ref = adapter_apply_banked(bank, spec_ref, x, aid)
+    y_ker = jax.jit(lambda b, x, i: adapter_apply_banked(b, spec_ker, x, i)
+                    )(bank, x, aid)
+    assert float(jnp.max(jnp.abs(y_ker - y_ref))) < 1e-5
+
+
+# ---------------------------------------------------------------------------
+# Engine-level adapter isolation
+# ---------------------------------------------------------------------------
+
+def test_different_adapters_diverge_same_adapter_matches():
+    """Identical prompts on slots bound to different adapters must diverge;
+    identical prompts on the SAME adapter -- concurrently and in a REUSED
+    slot -- must match token-for-token."""
+    engine = _bank_engine([_perturbed_peft(1), _perturbed_peft(2)], slots=2)
+    engine.submit(Request(prompt=PROBE, max_new_tokens=8, adapter=0))  # uid 0
+    engine.submit(Request(prompt=PROBE, max_new_tokens=8, adapter=1))  # uid 1
+    engine.submit(Request(prompt=PROBE, max_new_tokens=8, adapter=1))  # uid 2
+    engine.submit(Request(prompt=PROBE, max_new_tokens=8, adapter=1))  # uid 3
+    engine.run_until_done()
+    gens = {req.uid: g for req, g in engine.finished}
+    assert len(gens) == 4
+    assert gens[0] != gens[1], "different adapters produced identical tokens"
+    assert gens[1] == gens[2], "same adapter diverged across concurrent slots"
+    assert gens[1] == gens[3], "same adapter diverged in a reused slot"
+
+
+def test_bank_of_one_matches_single_adapter_engine():
+    """engine-with-bank(A=1) == the no-bank engine, token-for-token (the
+    banked gather path must be a pure re-layout, not a different model)."""
+    peft = _perturbed_peft(5)
+    plain = ServeEngine(CFG, {"backbone": _BACKBONE, "peft": peft},
+                        batch_slots=2, max_len=64)
+    banked = _bank_engine([peft], slots=2)
+    for engine in (plain, banked):
+        engine.submit(Request(prompt=PROBE, max_new_tokens=8))
+        engine.submit(Request(prompt=[40, 2], max_new_tokens=6))
+        engine.run_until_done()
+    plain_g = {r.uid: g for r, g in plain.finished}
+    banked_g = {r.uid: g for r, g in banked.finished}
+    assert plain_g == banked_g
+
+
+# ---------------------------------------------------------------------------
+# Paging
+# ---------------------------------------------------------------------------
+
+def test_bank_paging_parity_and_lru():
+    """A 4-adapter bank with only 2 resident rows must serve the same tokens
+    as the fully-resident bank -- paging moves factors, never changes math."""
+    pefts = [_perturbed_peft(s) for s in (11, 12, 13, 14)]
+    reqs = [Request(prompt=PROBE, max_new_tokens=6, adapter=a)
+            for a in (0, 1, 2, 3, 1)]
+
+    def serve(max_resident):
+        engine = _bank_engine(pefts, slots=2, max_resident=max_resident)
+        for r in reqs:
+            engine.submit(Request(prompt=list(r.prompt),
+                                  max_new_tokens=r.max_new_tokens,
+                                  adapter=r.adapter))
+        engine.run_until_done()
+        return ({r.uid: g for r, g in engine.finished}, engine.bank)
+
+    full_g, full_bank = serve(None)
+    paged_g, paged_bank = serve(2)
+    assert full_g == paged_g, "paging changed served tokens"
+    assert not full_bank.paged and full_bank.page_ins == 0
+    assert paged_bank.paged and paged_bank.page_ins > 0
+    assert len(paged_bank.resident_adapters()) == 2
+
+
+def test_bank_validation():
+    pefts = [_perturbed_peft(1), _perturbed_peft(2)]
+    with pytest.raises(ValueError):
+        AdapterBank([])
+    with pytest.raises(ValueError):
+        AdapterBank(pefts, max_resident=3)          # > A
+    with pytest.raises(ValueError):
+        # lora-style peft (no TT 'down' factors) cannot be banked
+        AdapterBank([{"blocks": {"adapter_attn": {"w": jnp.zeros((2, 2))}}}])
+    with pytest.raises(ValueError):
+        # paged bank smaller than the slot count can deadlock -> rejected
+        _bank_engine(pefts + [_perturbed_peft(3)], slots=2, max_resident=1)
+    engine = _bank_engine(pefts, slots=2)
+    with pytest.raises(ValueError):
+        engine.submit(Request(prompt=PROBE, adapter=2))  # out of range
+    plain = ServeEngine(CFG, {"backbone": _BACKBONE, "peft": pefts[0]},
+                        batch_slots=2, max_len=64)
+    with pytest.raises(ValueError):
+        plain.submit(Request(prompt=PROBE, adapter=1))   # no bank
+
+
+# ---------------------------------------------------------------------------
+# fed -> serve export
+# ---------------------------------------------------------------------------
+
+def test_fed_results_export_and_serve():
+    """Two tiny federated runs (same foundation seed, different tenant data)
+    -> AdapterBank.from_fed_results -> one engine serves both tenants on the
+    backbone they were actually trained against."""
+    from repro.data.synthetic import ClassificationTask
+    from repro.fed.api import FedSession
+
+    results = [
+        FedSession(CFG,
+                   ClassificationTask(n_classes=2, vocab=256, seq_len=8,
+                                      seed=task_seed, signal=0.5),
+                   n_clients=2, n_rounds=1, local_steps=1,
+                   batch_size=4, train_per_client=8, eval_n=8,
+                   seed=0).run()
+        for task_seed in (0, 1)]
+    # same session seed -> same frozen backbone; that is what gets served
+    assert all(jnp.array_equal(a, b) for a, b in
+               zip(jax.tree.leaves(results[0].backbone),
+                   jax.tree.leaves(results[1].backbone)))
+    bank = AdapterBank.from_fed_results(results)
+    assert bank.n_adapters == 2
+    engine = ServeEngine(CFG, {"backbone": results[0].backbone},
+                         batch_slots=2, max_len=64, bank=bank)
+    engine.submit(Request(prompt=PROBE, max_new_tokens=4, adapter=0))
+    engine.submit(Request(prompt=PROBE, max_new_tokens=4, adapter=1))
+    engine.run_until_done()
+    assert len(engine.finished) == 2
+    assert all(len(g) == 4 for _, g in engine.finished)

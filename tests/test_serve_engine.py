@@ -9,6 +9,7 @@ if KV lanes are not properly isolated/reset.
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.configs.base import get_config
 from repro.models.transformer import init_cache, model_decode_step, model_init
@@ -44,6 +45,26 @@ def test_engine_matches_manual_short_horizon():
     by_uid = {req.uid: gen for req, gen in engine.finished}
     for uid, p in enumerate(prompts):
         assert by_uid[uid] == _manual_greedy(cfg, params, p, 3)
+
+
+def test_decode_positions_contiguous():
+    """Regression for the piggyback-prefill off-by-one: the decode phase must
+    feed generated[-1] at its TRUE absolute position
+    (prompt_pos + len(generated) - 1).  The pre-fix engine fed it one later,
+    leaving a hole in the KV cache at position len(prompt) and shifting every
+    decode-step rope angle -- which is why the engine diverged from the
+    manual-decode reference (test_engine_matches_manual_short_horizon)."""
+    cfg = get_config("qwen3_4b", smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+    engine = ServeEngine(cfg, params, batch_slots=1, max_len=64)
+    engine.submit(Request(prompt=[5, 9, 13], max_new_tokens=4))
+    engine.run_until_done()
+    # prompt tokens at 0..2, then t0@3, t1@4, t2@5 (t3 is sampled but never
+    # fed back).  The cache lane must hold exactly the contiguous range.
+    pos = np.asarray(engine.cache["pos"])[:, 0]            # (L, C)
+    for layer in range(pos.shape[0]):
+        filled = sorted(int(x) for x in pos[layer] if x >= 0)
+        assert filled == list(range(6)), (layer, filled)
 
 
 def test_slot_isolation_and_reuse():
