@@ -1,0 +1,199 @@
+"""Async (FedBuff) vs sync round throughput under stragglers.
+
+The sync executors aggregate behind a round barrier: every round costs the
+MAX of the selected clients' virtual durations, so one straggler stalls the
+whole federation.  The async executor (``fed/async_exec.py``) flushes a
+staleness-discounted buffer every ``buffer_size`` arrivals instead, so the
+aggregation cadence follows the MEAN arrival rate, not the tail.
+
+This benchmark runs sync-scan vs async over straggler severity x channel at
+a fixed client count and reports BOTH clocks:
+
+  * ``sim_s_per_round`` -- the **simulated wall-clock** per server
+    aggregation under the shared per-client speed model
+    (:func:`repro.fed.async_exec.client_speeds`): what a real deployment
+    would experience.  Sync pays ``max(speeds[selected])`` per round
+    (computed analytically over the same plans); async reads the virtual
+    clock of the event-driven executor.  The acceptance figure
+    (``summary[*].speedup_sim_async_vs_scan`` >= 2x under the heavy
+    distribution) lives on this clock.
+  * ``exec_ms_per_round`` -- the real host wall-clock of the executor
+    itself (the simulator's own cost; scan's fused window wins this one by
+    construction).
+
+Both backends aggregate the same number of client updates per round
+(``buffer_size == n_selected``), so a flush and a sync round are
+apples-to-apples.  Results go to ``BENCH_async.json`` -- the fourth perf
+trajectory pillar (kernel, round, serve, async); render with
+``python scripts/render_experiments.py async``.
+
+    PYTHONPATH=src python benchmarks/bench_async.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):                 # `python benchmarks/bench_async.py`
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import row, tiny, write_bench_json
+from repro.data.synthetic import ClassificationTask
+from repro.fed.api import FedSession
+from repro.fed.async_exec import AsyncBackend, AsyncConfig, client_speeds
+from repro.fed.backends import get_backend
+from repro.fed.channel import Int8DeltaChannel
+
+TASK = ClassificationTask(n_classes=2, vocab=256, seq_len=8, seed=0,
+                          signal=0.5)
+LOCAL_STEPS = 1
+BATCH = 2           # cross-device on-device batch
+ALPHA = 0.5         # staleness discount for the async runs
+
+#: severity name -> AsyncConfig straggler knobs (lognormal keeps the mean
+#: moderate while the tail -- what a sync barrier pays -- explodes)
+SEVERITIES = {
+    "none": dict(straggler="homogeneous", straggler_param=1.0),
+    "mild": dict(straggler="lognormal", straggler_param=0.75),
+    "heavy": dict(straggler="lognormal", straggler_param=1.5),
+}
+
+
+def _channel(name: str):
+    return [Int8DeltaChannel()] if name == "int8" else None
+
+
+def _async_config(severity: str) -> AsyncConfig:
+    return AsyncConfig(alpha=ALPHA, **SEVERITIES[severity])
+
+
+def bench_config(backend_name: str, severity: str, n_clients: int,
+                 channel: str, rounds: int, window: int) -> dict:
+    """Wall-time `rounds` aggregations (after a compile warmup) on the real
+    clock AND the virtual straggler clock; one record per config."""
+    # chunking is driven manually below (run_chunked), so `window` is the
+    # chunk length; backend.window never applies outside FedSession.run()
+    acfg = _async_config(severity)
+    backend = (AsyncBackend(acfg) if backend_name == "async"
+               else get_backend(backend_name))
+    sess = FedSession(tiny("fedtt"), TASK, backend=backend,
+                      channel=_channel(channel), n_clients=n_clients,
+                      n_rounds=rounds + window, local_steps=LOCAL_STEPS,
+                      batch_size=BATCH, train_per_client=16, eval_n=32,
+                      lr=1e-2, seed=0, eval_every=0)
+    rng, trainable, _ = sess._setup()
+    speeds = client_speeds(n_clients, acfg, sess.seed)
+
+    all_plans = []
+
+    def run_chunked(trainable, start, n):
+        t = start
+        while t < start + n:
+            chunk = min(window, start + n - t)
+            plans = [sess._plan_round(t + i, rng) for i in range(chunk)]
+            all_plans.extend(plans)
+            trainable, _, _ = backend.run_rounds(sess, trainable, plans, t)
+            t += chunk
+        return trainable
+
+    trainable = run_chunked(trainable, 0, window)      # compile warmup
+    jax.block_until_ready(jax.tree.leaves(trainable)[0])
+    t0 = time.perf_counter()
+    trainable = run_chunked(trainable, window, rounds)
+    jax.block_until_ready(jax.tree.leaves(trainable)[0])
+    exec_ms = (time.perf_counter() - t0) / rounds * 1e3
+
+    # the virtual (straggler) clock, over every aggregation of the run
+    if backend_name == "async":
+        sim_s = backend.sim_time / max(backend.buffer_flushes, 1)
+        stale = backend.staleness_hist
+        n_up = sum(stale.values())
+        extra = {"buffer_flushes": backend.buffer_flushes,
+                 "staleness_mean": (sum(s * c for s, c in stale.items())
+                                    / max(n_up, 1)),
+                 "staleness_max": max(stale) if stale else 0}
+    else:
+        # a sync round waits on its slowest selected client
+        sim_s = float(np.mean([LOCAL_STEPS * speeds[p.selected].max()
+                               for p in all_plans]))
+        extra = {}
+    rec = {"backend": backend_name, "severity": severity,
+           "n_clients": n_clients, "channel": channel,
+           "rounds_measured": rounds, "exec_ms_per_round": exec_ms,
+           "sim_s_per_round": sim_s, "sim_rounds_per_sec": 1.0 / sim_s,
+           **extra}
+    row(f"async[{backend_name}][{severity}][{channel}]", exec_ms * 1e3,
+        f"sim_rounds_per_sec={1.0 / sim_s:.3f}")
+    return rec
+
+
+def summarize(results: list[dict]) -> list[dict]:
+    """Per (severity, channel): the simulated-clock speedup of async over
+    the sync scan barrier (the acceptance figure) + the real executor
+    overhead async pays for its python event loop."""
+    by = {}
+    for r in results:
+        by.setdefault((r["severity"], r["channel"]), {})[r["backend"]] = r
+    out = []
+    for (sev, ch), group in sorted(by.items()):
+        if "scan" not in group or "async" not in group:
+            continue
+        out.append({
+            "severity": sev, "channel": ch,
+            "speedup_sim_async_vs_scan": (
+                group["scan"]["sim_s_per_round"]
+                / group["async"]["sim_s_per_round"]),
+            "exec_overhead_ms_async_vs_scan": (
+                group["async"]["exec_ms_per_round"]
+                - group["scan"]["exec_ms_per_round"]),
+        })
+    return out
+
+
+def run(smoke: bool = False, out_json: str | None = None) -> dict:
+    # smoke runs write a separate path so they never clobber the committed
+    # perf-trajectory file
+    if out_json is None:
+        out_json = "BENCH_async.smoke.json" if smoke else "BENCH_async.json"
+    n_clients = 8 if smoke else 32
+    rounds = 4 if smoke else 16
+    window = 2 if smoke else 8
+    severities = ("none", "heavy") if smoke else ("none", "mild", "heavy")
+    channels = ("fp32",) if smoke else ("fp32", "int8")
+
+    results = []
+    for severity in severities:
+        for channel in channels:
+            for backend in ("scan", "async"):
+                results.append(bench_config(backend, severity, n_clients,
+                                            channel, rounds, window))
+
+    payload = {"meta": {"backend": jax.default_backend(), "smoke": smoke,
+                        "config": "tiny-encoder/fedtt",
+                        "n_clients": n_clients, "local_steps": LOCAL_STEPS,
+                        "batch_size": BATCH, "alpha": ALPHA,
+                        "severities": {k: SEVERITIES[k] for k in severities}},
+               "results": results,
+               "summary": summarize(results)}
+    write_bench_json(out_json, payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (separate output path)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, out_json=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -112,6 +112,51 @@ def round_table(path="BENCH_round.json"):
     return "\n".join(lines)
 
 
+def async_table(path="BENCH_async.json"):
+    """The EXPERIMENTS.md §Perf async-vs-sync table: simulated wall-clock
+    rounds/sec (the straggler story) + real executor ms/round, per
+    straggler severity and channel."""
+    with open(path) as f:
+        data = json.load(f)
+    meta = data["meta"]
+    by = {}
+    for r in data["results"]:
+        by.setdefault((r["severity"], r["channel"]), {})[r["backend"]] = r
+    sev_order = {"none": 0, "mild": 1, "heavy": 2}
+    lines = [f"Measured on backend=`{meta['backend']}`, "
+             f"config=`{meta['config']}`, clients={meta['n_clients']}, "
+             f"local_steps={meta['local_steps']}, "
+             f"batch={meta['batch_size']}, alpha={meta['alpha']}.",
+             "",
+             "| straggler | channel | backend | sim s/round | sim rounds/s | "
+             "x vs scan (sim) | exec ms/round | mean staleness |",
+             "|---|---|---|---|---|---|---|---|"]
+    for (sev, ch), group in sorted(
+            by.items(), key=lambda kv: (sev_order.get(kv[0][0], 9), kv[0][1])):
+        scan_sim = group.get("scan", {}).get("sim_s_per_round")
+        for b in ("scan", "async"):
+            if b not in group:
+                continue
+            r = group[b]
+            speed = (f"{scan_sim / r['sim_s_per_round']:.1f}x"
+                     if scan_sim else "—")
+            stale = (f"{r['staleness_mean']:.2f}"
+                     if "staleness_mean" in r else "—")
+            lines.append(
+                f"| {sev} | {ch} | {b} | {r['sim_s_per_round']:.2f} | "
+                f"{r['sim_rounds_per_sec']:.3f} | {speed} | "
+                f"{r['exec_ms_per_round']:.0f} | {stale} |")
+    lines += ["", "Simulated-clock speedup of the FedBuff buffer over the "
+              "sync barrier (acceptance: >= 2x under `heavy`):", ""]
+    for s in data.get("summary", []):
+        lines.append(f"- {s['severity']} / {s['channel']}: "
+                     f"{s['speedup_sim_async_vs_scan']:.2f}x "
+                     f"(async python event loop costs "
+                     f"+{s['exec_overhead_ms_async_vs_scan']:.0f} ms/round "
+                     f"of real executor time)")
+    return "\n".join(lines)
+
+
 def serve_table(path="BENCH_serve.json"):
     """The EXPERIMENTS.md §Perf serve-throughput table (tokens/sec for the
     banked multi-tenant engine vs sequential per-adapter serving)."""
@@ -155,6 +200,10 @@ if __name__ == "__main__":
     if which == "serve":
         print(serve_table(sys.argv[2] if len(sys.argv) > 2
                           else "BENCH_serve.json"))
+        sys.exit(0)
+    if which == "async":
+        print(async_table(sys.argv[2] if len(sys.argv) > 2
+                          else "BENCH_async.json"))
         sys.exit(0)
     if which in ("all", "sp"):
         print("### Single-pod (16x16)\n")

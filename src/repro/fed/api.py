@@ -11,8 +11,11 @@ One entry point, four orthogonal pluggable pieces:
     (fp32 identity, int8 delta quantization, Gaussian DP perturbation), each
     stage reporting its own wire bytes into the :class:`CommLog`.
   * **Backend** (``fed/backends.py``): the python-loop simulator, the
-    vmap/mesh-sharded one-jit-per-round executor, or the fused
-    scan-over-rounds window executor (``"scan"``, ``fed/roundrun.py``).
+    vmap/mesh-sharded one-jit-per-round executor, the fused
+    scan-over-rounds window executor (``"scan"``, ``fed/roundrun.py``), or
+    the staleness-aware async FedBuff executor (``"async"``,
+    ``fed/async_exec.py`` -- configure via
+    ``backend=AsyncBackend(AsyncConfig(...))``).
 
 Typical use::
 
@@ -36,6 +39,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.data.synthetic import ClassificationTask, label_skew_partition
 from repro.fed import dp as dp_lib
+from repro.fed.async_exec import AsyncConfig
 from repro.fed.backends import Backend, RoundPlan, get_backend
 from repro.fed.channel import Channel, ChannelStack, get_channel
 from repro.fed.comm import CommLog
@@ -64,6 +68,12 @@ class FedResult:
     #: all tenants fine-tuned the same foundation model, i.e. sessions with
     #: the same ``seed`` (which derives the backbone init).
     backbone: dict | None = None
+    #: async (FedBuff) executor only: staleness value -> count of buffered
+    #: updates aggregated at that staleness (``fed/async_exec.py``)
+    staleness_hist: dict | None = None
+    #: async executor only: number of server aggregations (buffer flushes);
+    #: each flush is one ``comm`` ledger entry
+    buffer_flushes: int | None = None
 
     def export_adapter(self) -> dict:
         """fed -> serve export: the aggregated PEFT pytree in the layout
@@ -277,7 +287,8 @@ class FedSession:
                          best_acc=max(acc_history),
                          trainable=global_trainable,
                          eval_rounds=eval_rounds,
-                         backbone=self.backbone)
+                         backbone=self.backbone,
+                         **self.backend.result_extras(self))
 
 
-__all__ = ["FedResult", "FedSession", "LocalDP"]
+__all__ = ["AsyncConfig", "FedResult", "FedSession", "LocalDP"]

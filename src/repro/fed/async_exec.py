@@ -1,0 +1,323 @@
+"""Staleness-aware asynchronous federated executor (FedBuff-style).
+
+Every other backend is synchronous: a round barrier waits for the slowest
+client before the server aggregates.  Cross-device federations do not work
+like that -- clients are heterogeneous, up-links land out of order, and the
+server cannot afford to idle behind stragglers.  :class:`AsyncBackend`
+simulates that regime on a **virtual clock**:
+
+  * each client gets a *speed* drawn from a configurable straggler
+    distribution (:func:`client_speeds`); a dispatched job finishes after
+    ``local_steps * speed`` virtual seconds;
+  * up to :attr:`AsyncConfig.concurrency` clients train concurrently; each
+    trains against the **server version it started from** (a snapshot
+    reference of the trainable leaves) with its strategy mask resolved at
+    that *start* version -- so FedTT+/RoLoRA factor cycling keeps its
+    frozen-factor semantics even when the update lands rounds later;
+  * up-links are processed in **arrival order** through the existing
+    :class:`~repro.fed.channel.ChannelStack` host path, so int8 delta
+    quantization, DP noise keys, and per-stage ``CommLog.stage_kb``
+    accounting all work unchanged out of order;
+  * the server buffers decoded deltas and **flushes** every
+    :attr:`AsyncConfig.buffer_size` arrivals (FedBuff), discounting each
+    update by polynomial staleness ``(1 + s)^-alpha`` where ``s`` is the
+    number of server versions that elapsed since the client started
+    (:func:`staleness_weight`); the flush applies the per-leaf normalized
+    weighted deltas via :func:`repro.fed.strategies.apply_weighted_deltas`.
+
+One flush = one ledger entry = one "round" of the async run.  Degenerate
+configuration -- homogeneous speeds, ``buffer_size == n_selected``,
+``alpha=0`` -- reproduces synchronous FedAvg leaf-for-leaf (to fp
+tolerance), which ``tests/test_fed_async.py`` pins against
+:class:`~repro.fed.backends.LoopBackend` across strategies and channels.
+
+Chunk boundaries (``run_rounds`` calls) are evaluation joins: the executor
+drains in-flight clients and flushes any partial buffer so the evaluated
+state reflects all dispatched work.  Run with ``eval_every=0`` for one
+barrier-free window over the whole session (the benchmark configuration;
+see DESIGN.md §11).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+from collections import deque
+
+import numpy as np
+
+from repro.fed.backends import Backend, _tree_sub, run_client_steps
+from repro.fed.strategies import Strategy, apply_weighted_deltas
+
+#: registered straggler distributions (speed multiplier per client; 1.0 =
+#: the homogeneous baseline, larger = slower)
+STRAGGLER_DISTS = ("homogeneous", "uniform", "lognormal", "pareto")
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncConfig:
+    """Knobs of the FedBuff-style executor.
+
+    ``buffer_size``/``concurrency`` of None default to the per-round
+    selection size, which makes ``straggler="homogeneous"`` + ``alpha=0``
+    the degenerate sync-FedAvg configuration."""
+    #: server aggregates every this-many arrivals (None -> n_selected)
+    buffer_size: int | None = None
+    #: polynomial staleness discount exponent: weight = (1 + s)^-alpha
+    alpha: float = 0.5
+    #: max clients training concurrently (None -> n_selected)
+    concurrency: int | None = None
+    #: straggler distribution drawn once per client (see STRAGGLER_DISTS)
+    straggler: str = "homogeneous"
+    #: severity: uniform width / lognormal sigma / pareto shape (smaller
+    #: pareto shape = heavier tail)
+    straggler_param: float = 1.0
+    #: server step size on the aggregated delta (1.0 = FedAvg semantics)
+    server_lr: float = 1.0
+    #: extra entropy for the speed draw (composed with the session seed)
+    speed_seed: int = 0
+
+
+def staleness_weight(s: int, alpha: float) -> float:
+    """Polynomial staleness discount ``(1 + s)^-alpha`` (FedBuff).
+
+    Unnormalized; the flush normalizes per leaf over the contributing
+    clients (``strategies.apply_weighted_deltas``).  ``alpha=0`` gives every
+    update weight 1.0 regardless of staleness."""
+    if s < 0:
+        raise ValueError(f"staleness must be >= 0, got {s}")
+    return float((1.0 + s) ** (-alpha))
+
+
+def client_speeds(n_clients: int, config: AsyncConfig, seed: int) -> np.ndarray:
+    """Per-client speed multipliers (virtual seconds per local step), drawn
+    once per session from ``config.straggler``; deterministic in
+    ``(seed, config.speed_seed)``."""
+    rng = np.random.default_rng([abs(int(seed)), abs(int(config.speed_seed)),
+                                 0xA51C])
+    p = float(config.straggler_param)
+    if config.straggler != "homogeneous" and p < 0:
+        # a negative width/sigma/shape would produce negative durations and
+        # run the virtual clock backwards
+        raise ValueError(f"straggler_param must be >= 0, got {p}")
+    if config.straggler == "homogeneous":
+        return np.ones(n_clients)
+    if config.straggler == "uniform":
+        return 1.0 + p * rng.random(n_clients)
+    if config.straggler == "lognormal":
+        return rng.lognormal(0.0, p, n_clients)
+    if config.straggler == "pareto":
+        return 1.0 + rng.pareto(p, n_clients)
+    raise KeyError(f"unknown straggler distribution {config.straggler!r}; "
+                   f"registered: {STRAGGLER_DISTS}")
+
+
+@dataclasses.dataclass
+class _Job:
+    """One in-flight client: trained at dispatch, buffered at arrival."""
+    client: int
+    plan_round: int      # the plan the job came from (DP-SGD key stream)
+    start_version: int   # server version the client downloaded
+    delta: dict          # trained - start view (pre-channel)
+    mask: dict           # strategy mask at the START version
+
+
+@dataclasses.dataclass
+class _Buffered:
+    """One arrived up-link awaiting the next flush."""
+    delta: dict          # as decoded by the server (post-channel)
+    mask: dict
+    start_version: int
+    wire: float          # bytes on the wire (channel accounting)
+    per_stage: dict
+
+
+class AsyncBackend(Backend):
+    """Virtual-clock FedBuff executor (see module docstring).
+
+    Stateful across ``run_rounds`` chunks within one session: the clock,
+    server version, and staleness statistics persist so eval chunking
+    (``eval_every``) does not reset the simulation; state resets when a run
+    starts over at round 0."""
+
+    name = "async"
+    fused = True
+    # effectively unbounded: chunk boundaries are drains (sync joins), so
+    # the only thing that may cut a window is an eval_every boundary --
+    # eval_every=0 really is ONE barrier-free window over the whole run
+    window = 1 << 30
+
+    def __init__(self, config: AsyncConfig | None = None):
+        self.config = config if config is not None else AsyncConfig()
+        if self.config.straggler not in STRAGGLER_DISTS:
+            raise KeyError(
+                f"unknown straggler distribution {self.config.straggler!r}; "
+                f"registered: {STRAGGLER_DISTS}")
+        for knob in ("buffer_size", "concurrency"):
+            v = getattr(self.config, knob)
+            # None/0 = "default to the per-round selection size"; anything
+            # else must be a positive count (a negative concurrency would
+            # silently dispatch nothing)
+            if v is not None and v != 0 and v < 1:
+                raise ValueError(f"{knob} must be >= 1 (or None/0 for the "
+                                 f"selection-size default), got {v}")
+        if self.config.alpha < 0:
+            raise ValueError(f"alpha must be >= 0 (a negative exponent would "
+                             f"AMPLIFY stale updates), got {self.config.alpha}")
+        self._reset()
+
+    def _reset(self):
+        self._clock = 0.0
+        self._version = 0
+        self._seq = 0
+        self._speeds = None
+        #: staleness value -> number of buffered updates aggregated at it
+        self.staleness_hist: dict[int, int] = {}
+        #: number of server aggregations (flushes) performed
+        self.buffer_flushes = 0
+        #: virtual seconds elapsed (the simulated wall clock)
+        self.sim_time = 0.0
+
+    # ------------------------------------------------------------------
+    def result_extras(self, session) -> dict:
+        del session
+        return {"staleness_hist": dict(sorted(self.staleness_hist.items())),
+                "buffer_flushes": self.buffer_flushes}
+
+    def incompatible_reason(self, session) -> str | None:
+        """Why this session cannot run async (None when it can)."""
+        if not session.strategy.supports_stacked:
+            return (f"strategy {session.strategy.name!r} uses per-client "
+                    "views/shapes; the async flush applies staleness-weighted "
+                    "deltas at server shapes -- use backend='loop'")
+        if type(session.strategy).aggregate is not Strategy.aggregate:
+            return (f"strategy {session.strategy.name!r} overrides "
+                    "aggregate(); the async flush applies its own "
+                    "staleness-weighted delta merge and would silently "
+                    "ignore the custom server rule -- use backend='loop'")
+        return None
+
+    def run_round(self, session, global_trainable, plan, round_idx):
+        # reject BEFORE simulating: a multi-flush plan would advance the
+        # clock/version/stats and consume channel keys only to discard the
+        # result (the single-(kb, stages) return type cannot carry more
+        # than one flush's ledger)
+        n_sel = len(plan.selected)
+        if n_sel == 0 or (self.config.buffer_size
+                          and self.config.buffer_size < n_sel):
+            raise ValueError(
+                f"plan with {n_sel} selected clients and buffer_size="
+                f"{self.config.buffer_size} does not flush exactly once; "
+                "use run_rounds for async configurations with "
+                "buffer_size != n_selected")
+        tr, kbs, stages = self.run_rounds(session, global_trainable, [plan],
+                                          round_idx)
+        return tr, kbs[0], stages[0]
+
+    # ------------------------------------------------------------------
+    def run_rounds(self, session, global_trainable, plans, start_round,
+                   eval_hook=None):
+        reason = self.incompatible_reason(session)
+        if reason is not None:
+            raise ValueError(reason)
+        if start_round == 0:
+            self._reset()
+        if self._speeds is None:
+            self._speeds = client_speeds(session.n_clients, self.config,
+                                         session.seed)
+        cfg = self.config
+        strat, stack = session.strategy, session.channel
+        optimizer = session.optimizer
+
+        # FIFO job source: each plan contributes its selected clients with
+        # their precomputed (K, B) batch rows, in plan order
+        queue = deque()
+        for i, plan in enumerate(plans):
+            for pos, ci in enumerate(plan.selected):
+                queue.append((int(ci), plan.batch_idx[pos], start_round + i))
+        n_sel = len(plans[0].selected)
+        if (not cfg.buffer_size or not cfg.concurrency) and any(
+                len(p.selected) != n_sel for p in plans):
+            raise ValueError(
+                "per-round selection sizes vary across this window; the "
+                "'selection size' defaults for buffer_size/concurrency are "
+                "ambiguous -- set them explicitly in AsyncConfig")
+        buffer_size = cfg.buffer_size if cfg.buffer_size else n_sel
+        concurrency = cfg.concurrency if cfg.concurrency else n_sel
+
+        trainable = global_trainable
+        in_flight: list = []        # heap of (finish_time, seq, _Job)
+        buffer: list[_Buffered] = []
+        kbs, stage_list = [], []
+
+        def flush():
+            nonlocal trainable
+            stale = [self._version - e.start_version for e in buffer]
+            weights = [staleness_weight(s, cfg.alpha) for s in stale]
+            for s in stale:
+                self.staleness_hist[s] = self.staleness_hist.get(s, 0) + 1
+            trainable = apply_weighted_deltas(
+                trainable, [e.delta for e in buffer],
+                [e.mask for e in buffer], weights, server_lr=cfg.server_lr)
+            self._version += 1
+            self.buffer_flushes += 1
+            kbs.append(float(np.mean([e.wire for e in buffer])) / 1024)
+            acc: dict = {}
+            for e in buffer:
+                for name, b in e.per_stage.items():
+                    acc.setdefault(name, []).append(b / 1024)
+            stage_list.append({n: float(np.mean(v)) for n, v in acc.items()})
+            buffer.clear()
+
+        while queue or in_flight:
+            # dispatch replacements AFTER a whole arrival timestamp is
+            # processed, so simultaneous finishers never hand a stale
+            # snapshot to the next wave (degenerate case: plan r+1's
+            # clients all start at version r+1)
+            while queue and len(in_flight) < concurrency:
+                client, rows, plan_round = queue.popleft()
+                view, ccfg = strat.client_view(trainable, client)
+                is_global = view is trainable
+                mask_c = strat.mask(view, self._version)
+                opt_state = (session.opt_template(view) if is_global
+                             else optimizer.init(view))
+                trained = run_client_steps(
+                    session, view, opt_state, mask_c,
+                    ccfg if ccfg is not None else session.cfg,
+                    rows, plan_round, client)
+                job = _Job(client, plan_round, self._version,
+                           _tree_sub(trained, view), mask_c)
+                dur = float(self._speeds[client]) * len(rows)
+                heapq.heappush(in_flight, (self._clock + dur, self._seq, job))
+                self._seq += 1
+            if not in_flight:
+                break
+            # pop every arrival sharing the earliest finish time (ties are
+            # deterministic: dispatch order)
+            t0 = in_flight[0][0]
+            arrivals = []
+            while in_flight and in_flight[0][0] == t0:
+                arrivals.append(heapq.heappop(in_flight)[2])
+            self._clock = t0
+            for job in arrivals:
+                # the channel runs at ARRIVAL, in arrival order: stateful
+                # stages (DP noise) consume their key stream exactly as a
+                # real out-of-order up-link would
+                delta, wire, per_stage = stack.uplink(job.delta, job.mask)
+                buffer.append(_Buffered(delta, job.mask, job.start_version,
+                                        wire, per_stage))
+                if len(buffer) >= buffer_size:
+                    flush()
+
+        if buffer:
+            # chunk-boundary drain: a partial buffer still flushes so the
+            # evaluated state reflects every dispatched client
+            flush()
+        self.sim_time = self._clock
+        if eval_hook is not None:
+            eval_hook(trainable, start_round + len(plans) - 1)
+        return trainable, kbs, stage_list
+
+
+__all__ = ["AsyncBackend", "AsyncConfig", "STRAGGLER_DISTS", "client_speeds",
+           "staleness_weight"]

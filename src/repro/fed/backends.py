@@ -17,6 +17,10 @@ floating-point tolerance on the aggregated trainable pytree:
     ``lax.scan`` with donated carry buffers (``fed/roundrun.py``) -- the
     rounds/sec path for cross-device scale.  Falls back to the loop for
     heterorank (per-client shapes) and per-step DP-SGD.
+  * ``AsyncBackend`` (``fed/async_exec.py``, registered as ``"async"``):
+    the only NON-synchronous executor -- a virtual-clock FedBuff simulator
+    where up-links arrive out of order and the server flushes a staleness-
+    discounted buffer instead of waiting on a round barrier.
 
 A backend consumes the session's precomputed :class:`RoundPlan`\\ s (selected
 clients + batch indices), so all backends see identical data order and can
@@ -64,6 +68,10 @@ def _dp_local_step(trainable, opt_state, backbone, batch, freeze_mask,
     if freeze_mask is not None:
         grads = masked_update(grads, freeze_mask)
     updates, opt_state = optimizer.update(grads, opt_state, trainable)
+    if freeze_mask is not None:
+        # frozen means frozen: block weight-decay drift too (see
+        # fed/client.py::local_step_classify)
+        updates = masked_update(updates, freeze_mask)
     return apply_updates(trainable, updates), opt_state
 
 
@@ -73,6 +81,33 @@ def _tree_sub(a, b):
 
 def _tree_add(a, b):
     return jax.tree.map(lambda x, y: (x + y).astype(x.dtype), a, b)
+
+
+def run_client_steps(session, view, opt_state, mask_c, cfg_c, batch_rows,
+                     dp_round: int, client_id: int):
+    """K local steps for ONE client (shared by the loop and async
+    executors).  ``batch_rows`` is the client's (K, B) slice of the round
+    plan; ``dp_round`` seeds the per-step DP-SGD key stream with the PLAN's
+    round index, so the async executor's arrival order cannot change which
+    noise a client draws."""
+    gather = session.pool_gather
+    tr = view
+    for k in range(len(batch_rows)):
+        batch = gather(batch_rows[k])
+        if session.local_dp is not None:
+            sk = jax.random.fold_in(
+                session.dp_key, dp_round * 131 + client_id * 17 + k)
+            tr, opt_state = _dp_local_step(
+                tr, opt_state, session.backbone, batch, mask_c, sk,
+                cfg=cfg_c, n_classes=session.task.n_classes,
+                optimizer=session.optimizer,
+                clip=session.local_dp.clip, sigma=session.dp_sigma)
+        else:
+            tr, opt_state, _ = local_step_classify(
+                tr, opt_state, session.backbone, batch, mask_c,
+                cfg=cfg_c, n_classes=session.task.n_classes,
+                optimizer=session.optimizer)
+    return tr
 
 
 class Backend:
@@ -110,6 +145,12 @@ class Backend:
                 eval_hook(global_trainable, start_round + i)
         return global_trainable, kbs, stage_list
 
+    def result_extras(self, session) -> dict:
+        """Backend-specific FedResult fields (e.g. the async executor's
+        staleness histogram); merged into the result by FedSession.run()."""
+        del session
+        return {}
+
 
 class LoopBackend(Backend):
     """Python loop over clients, shared jit'd step (the simulation path)."""
@@ -119,7 +160,6 @@ class LoopBackend(Backend):
     def run_round(self, session, global_trainable, plan, round_idx):
         strat, stack = session.strategy, session.channel
         mask_g = strat.mask(global_trainable, round_idx)
-        gather = session.pool_gather
 
         client_trees, kb_clients, stage_acc = [], [], {}
         for i, ci in enumerate(plan.selected):
@@ -133,23 +173,8 @@ class LoopBackend(Backend):
                 opt_state = session.opt_template(view)
             else:
                 opt_state = session.optimizer.init(view)
-            tr = view
-            for k in range(session.local_steps):
-                batch = gather(plan.batch_idx[i, k])
-                if session.local_dp is not None:
-                    sk = jax.random.fold_in(
-                        session.dp_key,
-                        round_idx * 131 + int(ci) * 17 + k)
-                    tr, opt_state = _dp_local_step(
-                        tr, opt_state, session.backbone, batch, mask_c, sk,
-                        cfg=cfg_c, n_classes=session.task.n_classes,
-                        optimizer=session.optimizer,
-                        clip=session.local_dp.clip, sigma=session.dp_sigma)
-                else:
-                    tr, opt_state, _ = local_step_classify(
-                        tr, opt_state, session.backbone, batch, mask_c,
-                        cfg=cfg_c, n_classes=session.task.n_classes,
-                        optimizer=session.optimizer)
+            tr = run_client_steps(session, view, opt_state, mask_c, cfg_c,
+                                  plan.batch_idx[i], round_idx, int(ci))
             if stack.transparent:
                 # identity wire: skip the delta round trip (exact fp path)
                 wire, per_stage = stack.account(tr, mask_c)
@@ -323,8 +348,14 @@ class ScanBackend(Backend):
         return global_trainable, kbs, stage_list
 
 
+def _async_backend():
+    # local import: fed/async_exec.py imports Backend from this module
+    from repro.fed.async_exec import AsyncBackend
+    return AsyncBackend()
+
+
 _BACKENDS = {"loop": LoopBackend, "sharded": ShardedBackend,
-             "scan": ScanBackend}
+             "scan": ScanBackend, "async": _async_backend}
 
 
 def get_backend(spec) -> Backend:

@@ -102,6 +102,14 @@ class Channel:
         """Shape-based accounting on a live tree (compat entry point)."""
         return self.wire_bytes_static(_shape_sig(delta), _mask_sig(mask))
 
+    def error_bound(self, delta, mask) -> float | None:
+        """Worst-case |decoded - sent| over every communicated element, or
+        None when the stage is lossless (identity) / unbounded (noise).
+        Property tests bound a stack's round-trip error by summing the
+        stages' figures."""
+        del delta, mask
+        return None
+
 
 class IdentityFP32(Channel):
     """Uncompressed fp32 factors: the paper's 4 B/param accounting."""
@@ -139,6 +147,17 @@ class Int8DeltaChannel(Channel):
             if m:
                 total += int(np.prod(s)) + 4   # int8 payload + f32 scale
         return total
+
+    def error_bound(self, delta, mask):
+        """Round-to-nearest int8 with a per-tensor max/127 scale decodes
+        within scale/2 of the input: max over communicated leaves of
+        max|x| / 254 (plus the 1e-12 scale floor)."""
+        worst = 0.0
+        for x, m in zip(jax.tree.leaves(delta), jax.tree.leaves(mask)):
+            if m:
+                amax = float(jnp.max(jnp.abs(x)))
+                worst = max(worst, max(amax, 1e-12) / (2 * compress.INT8_MAX))
+        return worst
 
 
 class DPGaussianChannel(Channel):
@@ -228,6 +247,31 @@ class ChannelStack:
     def key_stages(self) -> tuple:
         """Indices of stages that consume PRNG keys on the device path."""
         return tuple(i for i, s in enumerate(self.stages) if s.needs_key)
+
+    @property
+    def stage_names(self) -> tuple:
+        """Stage names in wire order (training-side first)."""
+        return tuple(s.name for s in self.stages)
+
+    def error_bound(self, delta, mask) -> float | None:
+        """Worst-case elementwise decode error of the whole stack, or None
+        when no bound can be guaranteed.
+
+        Stage bounds are evaluated against the stack INPUT, which is exact
+        for at most one lossy bounded stage; stacking a second lossy
+        bounded stage would feed it the first stage's output (whose
+        magnitudes the input-based figure does not cover), so that case --
+        like any unbounded stage (Gaussian noise) -- returns None rather
+        than an unsound number."""
+        total, n_bounded = 0.0, 0
+        for s in self.stages:
+            if type(s).transform is not Channel.transform or not s.transparent:
+                b = s.error_bound(delta, mask)
+                if b is None:
+                    return None
+                total += b
+                n_bounded += 1
+        return total if n_bounded <= 1 else None
 
     # -- host-side accounting (zero device syncs) ---------------------------
     def account_static(self, shapes: tuple, masks: tuple):

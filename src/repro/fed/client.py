@@ -38,6 +38,11 @@ def local_step_classify(trainable: dict, opt_state, backbone: dict,
     if freeze_mask is not None:
         grads = masked_update(grads, freeze_mask)
     updates, opt_state = optimizer.update(grads, opt_state, trainable)
+    if freeze_mask is not None:
+        # frozen means FROZEN: decoupled weight decay would otherwise still
+        # move zero-grad leaves, leaving uncommunicated drift the server
+        # could never reproduce (async executors aggregate deltas only)
+        updates = masked_update(updates, freeze_mask)
     trainable = apply_updates(trainable, updates)
     return trainable, opt_state, dict(metrics, loss=loss)
 
@@ -54,5 +59,7 @@ def local_step_lm(trainable: dict, opt_state, backbone: dict, batch: dict,
     if freeze_mask is not None:
         grads = masked_update(grads, freeze_mask)
     updates, opt_state = optimizer.update(grads, opt_state, trainable)
+    if freeze_mask is not None:
+        updates = masked_update(updates, freeze_mask)   # see local_step_classify
     trainable = apply_updates(trainable, updates)
     return trainable, opt_state, dict(metrics, loss=loss)

@@ -48,6 +48,10 @@ def client_updates_sharded(stacked_trainable, stacked_opt, backbone, batches,
             if freeze_mask is not None:
                 grads = masked_update(grads, freeze_mask)
             updates, opt = optimizer.update(grads, opt, tr)
+            if freeze_mask is not None:
+                # frozen means frozen: block weight-decay drift too (see
+                # fed/client.py::local_step_classify)
+                updates = masked_update(updates, freeze_mask)
             return (apply_updates(tr, updates), opt), loss
 
         (trainable, opt_state), losses = jax.lax.scan(

@@ -81,6 +81,10 @@ def build_window_runner(session, n_sel: int, with_keys: bool):
             grads = jax.tree.map(lambda g, m: g * jnp.asarray(m, g.dtype),
                                  grads, mm)
             updates, opt = optimizer.update(grads, opt, tr)
+            # frozen means frozen: block weight-decay drift too (see
+            # fed/client.py::local_step_classify); mm is 0/1 data here
+            updates = jax.tree.map(lambda u, m: u * jnp.asarray(m, u.dtype),
+                                   updates, mm)
             return (apply_updates(tr, updates), opt), None
 
         (tr, opt), _ = jax.lax.scan(one_step, (view, opt0), client_batches)

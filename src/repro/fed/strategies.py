@@ -96,6 +96,38 @@ def aggregate_stacked_mults(stacked_peft: dict, mults: dict) -> dict:
     return jax.tree.map(agg, stacked_peft, mults)
 
 
+def apply_weighted_deltas(trainable: dict, deltas: list, masks: list,
+                          weights: list, server_lr: float = 1.0) -> dict:
+    """Server-side buffered-delta merge (the async executor's flush rule).
+
+    Per leaf: the weighted mean of the deltas from clients whose mask
+    communicated that leaf, normalized over the CONTRIBUTING clients only
+    (staleness discounting must not shrink a factor's update just because
+    other buffered clients trained a different factor of the chain); leaves
+    no buffered client communicated stay untouched.  With equal weights and
+    agreeing masks this reduces to FedAvg-of-deltas -- the degenerate-parity
+    case pinned in ``tests/test_fed_async.py``."""
+    if not (len(deltas) == len(masks) == len(weights)):
+        raise ValueError("deltas/masks/weights length mismatch")
+    flat_t, treedef = jax.tree_util.tree_flatten(trainable)
+    flat_d = [jax.tree.leaves(d) for d in deltas]
+    flat_m = [[bool(m) for m in jax.tree.leaves(mask)] for mask in masks]
+    out = []
+    for li, t in enumerate(flat_t):
+        total = sum(w for j, w in enumerate(weights) if flat_m[j][li])
+        if total <= 0.0:
+            out.append(t)
+            continue
+        acc = None
+        for j, w in enumerate(weights):
+            if not flat_m[j][li]:
+                continue
+            term = (w / total) * flat_d[j][li]
+            acc = term if acc is None else acc + term
+        out.append((t + server_lr * acc).astype(t.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
 def mask_multipliers(mask: dict):
     """Bool mask pytree -> f32 0./1. scalar pytree (scan-executor form)."""
     return jax.tree.map(lambda m: np.float32(bool(m)), mask)

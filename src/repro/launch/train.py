@@ -78,7 +78,16 @@ def run_federated_mode(args) -> float:
     from repro.fed.api import FedSession
     cfg = dataclasses.replace(TINY_ENCODER, peft=PEFTConfig(method=args.method))
     task = ClassificationTask(n_classes=2, vocab=256, seq_len=16, seed=args.seed)
-    res = FedSession(cfg, task, backend=args.fed_backend,
+    backend = args.fed_backend
+    if backend == "async":
+        from repro.fed.async_exec import AsyncBackend, AsyncConfig
+        backend = AsyncBackend(AsyncConfig(
+            buffer_size=args.buffer_size or None,
+            alpha=args.staleness_alpha,
+            concurrency=args.concurrency or None,
+            straggler=args.straggler,
+            straggler_param=args.straggler_param))
+    res = FedSession(cfg, task, backend=backend,
                      sampler=args.client_fraction, n_clients=args.clients,
                      n_rounds=args.rounds, local_steps=args.local_steps,
                      lr=args.lr, seed=args.seed,
@@ -87,6 +96,9 @@ def run_federated_mode(args) -> float:
           f"best_acc={res.best_acc:.3f} "
           f"uplink_total={res.comm.total_kb:.0f}KB "
           f"trainable={res.n_trainable}")
+    if res.buffer_flushes is not None:
+        print(f"[fed] async: {res.buffer_flushes} buffer flushes, "
+              f"staleness_hist={res.staleness_hist}")
     return res.best_acc
 
 
@@ -105,11 +117,26 @@ def main(argv=None):
     ap.add_argument("--clients", type=int, default=5)
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--local-steps", type=int, default=2)
-    ap.add_argument("--fed-backend", choices=["loop", "sharded", "scan"],
+    ap.add_argument("--fed-backend",
+                    choices=["loop", "sharded", "scan", "async"],
                     default="loop")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="evaluate every E rounds (0 = final round only); "
-                         "also the scan backend's max fused-window length")
+                         "also the scan backend's max fused-window length "
+                         "and the async backend's drain cadence")
+    ap.add_argument("--buffer-size", type=int, default=0,
+                    help="async: aggregate every N arrivals (0 = per-round "
+                         "selection size)")
+    ap.add_argument("--staleness-alpha", type=float, default=0.5,
+                    help="async: staleness discount (1+s)^-alpha")
+    ap.add_argument("--concurrency", type=int, default=0,
+                    help="async: clients in flight (0 = selection size)")
+    ap.add_argument("--straggler",
+                    choices=["homogeneous", "uniform", "lognormal", "pareto"],
+                    default="homogeneous",
+                    help="async: client speed distribution")
+    ap.add_argument("--straggler-param", type=float, default=1.0,
+                    help="async: straggler severity (sigma/shape/width)")
     ap.add_argument("--client-fraction", type=float, default=1.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default=None)

@@ -1,0 +1,501 @@
+"""Staleness-aware async executor (fed/async_exec.py) + property tests for
+the fed core.
+
+The load-bearing contracts:
+
+  * **Degenerate parity** -- homogeneous client speeds, a full buffer
+    (``buffer_size == n_selected``) and ``alpha=0`` collapse FedBuff to
+    synchronous FedAvg: the async executor must reproduce LoopBackend
+    leaf-for-leaf (fp tolerance) for {fedtt, fedtt_plus} x {fp32, int8},
+    including the per-flush CommLog figures.
+  * **Staleness semantics** -- masks resolve at the client's START version
+    (frozen-factor semantics survive out-of-order arrival), staleness
+    weights discount polynomially and normalize per leaf, and the whole
+    simulation is a deterministic function of (AsyncConfig, seed).
+  * **Fed-core properties** (hypothesis via tests/_hypothesis_shim.py,
+    degrading to plain spot checks when hypothesis is missing): int8
+    round-trip error bounds, per-stage wire-byte additivity, ledger
+    accounting.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.configs.base import PEFTConfig
+from repro.configs.paper_models import TINY_ENCODER
+from repro.data.synthetic import ClassificationTask
+from repro.fed.api import FedSession
+from repro.fed.async_exec import (AsyncBackend, AsyncConfig, STRAGGLER_DISTS,
+                                  client_speeds, staleness_weight)
+from repro.fed.channel import (ChannelStack, DPGaussianChannel, IdentityFP32,
+                               Int8DeltaChannel)
+from repro.fed.comm import CommLog
+from repro.fed.strategies import HeteroRankStrategy, apply_weighted_deltas
+
+TASK = ClassificationTask(n_classes=2, vocab=256, seq_len=16, seed=0,
+                          signal=0.5)
+
+SMALL = dict(n_clients=3, n_rounds=2, local_steps=2, batch_size=8,
+             train_per_client=32, eval_n=32, lr=1e-2, seed=0)
+
+
+def _cfg(method, **kw):
+    return dataclasses.replace(TINY_ENCODER,
+                               peft=PEFTConfig(method=method, **kw))
+
+
+def _channel(name):
+    return [Int8DeltaChannel()] if name == "int8" else None
+
+
+def _degenerate():
+    """The sync-equivalent config: homogeneous speeds, full buffer, no
+    staleness discount (buffer_size/concurrency default to n_selected)."""
+    return AsyncConfig(alpha=0.0, straggler="homogeneous")
+
+
+# ---------------------------------------------------------------------------
+# Degenerate parity: async == sync FedAvg leaf-for-leaf
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("channel", ["fp32", "int8"])
+@pytest.mark.parametrize("method", ["fedtt", "fedtt_plus"])
+def test_degenerate_parity_async_vs_loop(method, channel):
+    """Acceptance: AsyncBackend with homogeneous speeds + buffer_size ==
+    n_selected + alpha=0 reproduces LoopBackend FedAvg leaf-for-leaf, with
+    per-flush CommLog equality (one flush == one sync round)."""
+    cfg = _cfg(method)
+    res_loop = FedSession(cfg, TASK, backend="loop",
+                          channel=_channel(channel), **SMALL).run()
+    res_async = FedSession(cfg, TASK, backend=AsyncBackend(_degenerate()),
+                           channel=_channel(channel), **SMALL).run()
+    for a, b in zip(jax.tree.leaves(res_loop.trainable),
+                    jax.tree.leaves(res_async.trainable)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=2e-4, atol=1e-4)
+    # per-flush ledger equality, not just totals
+    np.testing.assert_allclose(res_async.comm.uplink_kb_per_round,
+                               res_loop.comm.uplink_kb_per_round)
+    assert res_async.comm.stage_kb.keys() == res_loop.comm.stage_kb.keys()
+    for name in res_loop.comm.stage_kb:
+        np.testing.assert_allclose(res_async.comm.stage_kb[name],
+                                   res_loop.comm.stage_kb[name])
+    # degenerate == zero staleness, one flush per round
+    assert res_async.buffer_flushes == SMALL["n_rounds"]
+    assert res_async.staleness_hist == {
+        0: SMALL["n_rounds"] * SMALL["n_clients"]}
+    assert res_loop.staleness_hist is None      # sync backends report none
+
+
+def test_async_registry_and_session_entry_points():
+    res = FedSession(_cfg("fedtt"), TASK, backend="async", n_clients=2,
+                     n_rounds=1, local_steps=1, batch_size=8,
+                     train_per_client=16, eval_n=16, lr=1e-2).run()
+    assert np.isfinite(res.acc_history).all()
+    assert res.comm.total_kb > 0
+    assert res.buffer_flushes >= 1
+    assert sum(res.staleness_hist.values()) == 2    # one update per client
+
+
+def test_train_cli_async_backend():
+    from repro.launch.train import main
+    assert main(["--mode", "federated", "--fed-backend", "async",
+                 "--clients", "2", "--rounds", "1", "--local-steps", "1",
+                 "--straggler", "lognormal", "--straggler-param", "0.5",
+                 "--buffer-size", "1"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Staleness semantics
+# ---------------------------------------------------------------------------
+
+def test_small_buffer_creates_staleness_and_partial_drain():
+    """buffer_size < n_selected: early flushes advance the server version
+    while slower/later arrivals still reference their start version, so the
+    histogram must contain nonzero staleness; a non-divisible job count
+    still drains fully (partial final flush)."""
+    backend = AsyncBackend(AsyncConfig(buffer_size=2, alpha=0.5,
+                                       straggler="lognormal",
+                                       straggler_param=1.0))
+    res = FedSession(_cfg("fedtt"), TASK, backend=backend, n_clients=5,
+                     n_rounds=3, local_steps=1, batch_size=8,
+                     train_per_client=16, eval_n=16, lr=1e-2, seed=0,
+                     eval_every=0).run()
+    n_updates = sum(res.staleness_hist.values())
+    assert n_updates == 15                          # every job aggregated
+    assert res.buffer_flushes == 8                  # ceil(15 / 2)
+    assert max(res.staleness_hist) > 0              # staleness happened
+    assert len(res.comm.uplink_kb_per_round) == res.buffer_flushes
+
+
+def test_mask_resolved_at_start_version():
+    """RoLoRA trains A on even versions, B on odd.  Homogeneous speeds with
+    buffer_size=2 of 4 clients: all four start at version 0 (mask: A
+    trains), the first flush advances the server to version 1, and the two
+    remaining arrivals land at staleness 1.  Their mask must still be the
+    START version's -- so B leaves stay EXACTLY at init everywhere."""
+    cfg = _cfg("rolora")
+    backend = AsyncBackend(AsyncConfig(buffer_size=2, alpha=0.5))
+    sess = FedSession(cfg, TASK, backend=backend, n_clients=4, n_rounds=1,
+                      local_steps=1, batch_size=8, train_per_client=16,
+                      eval_n=16, lr=1e-2, seed=0)
+    rng, trainable, _ = sess._setup()
+    before = {h: {side: [np.asarray(f) for f in jax.tree.leaves(s[side])]
+                  for side in ("A", "B")}
+              for h, s in trainable["peft"]["blocks"].items()}
+    plans = [sess._plan_round(0, rng)]
+    new_tr, _, _ = backend.run_rounds(sess, trainable, plans, 0)
+    assert backend.buffer_flushes == 2
+    assert backend.staleness_hist == {0: 2, 1: 2}
+    a_moved = False
+    for h, sides in new_tr["peft"]["blocks"].items():
+        for f_new, f_old in zip(jax.tree.leaves(sides["A"]),
+                                before[h]["A"]):
+            a_moved |= float(jnp.max(jnp.abs(f_new - f_old))) > 0
+        for f_new, f_old in zip(jax.tree.leaves(sides["B"]),
+                                before[h]["B"]):
+            np.testing.assert_array_equal(np.asarray(f_new), f_old)
+    assert a_moved   # the start-version mask trained A everywhere
+
+
+def test_staleness_discount_changes_aggregation():
+    """alpha > 0 must actually discount stale updates: a straggler config
+    with staleness produces different trainables for alpha=0 vs alpha=4."""
+    def run(alpha):
+        backend = AsyncBackend(AsyncConfig(buffer_size=2, alpha=alpha,
+                                           straggler="lognormal",
+                                           straggler_param=1.0))
+        return FedSession(_cfg("fedtt"), TASK, backend=backend, n_clients=4,
+                          n_rounds=2, local_steps=1, batch_size=8,
+                          train_per_client=16, eval_n=16, lr=1e-2, seed=0,
+                          eval_every=0).run()
+    r0, r4 = run(0.0), run(4.0)
+    assert r0.staleness_hist == r4.staleness_hist   # same arrival order
+    diffs = [float(jnp.max(jnp.abs(a - b)))
+             for a, b in zip(jax.tree.leaves(r0.trainable),
+                             jax.tree.leaves(r4.trainable))]
+    assert max(diffs) > 1e-6
+
+
+def test_async_rejects_per_client_shapes():
+    scfg = _cfg("fedtt", tt_rank=5)
+    strat = HeteroRankStrategy(scfg, ranks=(2, 3, 5))
+    with pytest.raises(ValueError, match="loop"):
+        FedSession(scfg, TASK, strategy=strat, backend="async", n_clients=3,
+                   n_rounds=1, local_steps=1, batch_size=8,
+                   train_per_client=16, eval_n=16, lr=1e-2).run()
+
+
+def test_async_rejects_custom_server_merge():
+    """A strategy overriding aggregate() must be refused, not silently
+    replaced by the async weighted-delta flush."""
+    from repro.fed.strategies import Strategy
+
+    class TrimmedMean(Strategy):
+        name = "trimmed"
+
+        def aggregate(self, client_trees, mask=None):
+            return super().aggregate(client_trees, mask)
+
+    with pytest.raises(ValueError, match="aggregate"):
+        FedSession(_cfg("fedtt"), TASK, strategy=TrimmedMean(),
+                   backend="async", n_clients=2, n_rounds=1, local_steps=1,
+                   batch_size=8, train_per_client=16, eval_n=16,
+                   lr=1e-2).run()
+
+
+def test_unknown_straggler_distribution_rejected():
+    with pytest.raises(KeyError):
+        AsyncBackend(AsyncConfig(straggler="quantum"))
+    with pytest.raises(KeyError):
+        client_speeds(4, AsyncConfig(straggler="quantum"), 0)
+
+
+def test_ragged_selection_needs_explicit_buffer():
+    """Variable per-round selection sizes make the 'selection size' default
+    for buffer_size/concurrency ambiguous -- must be set explicitly."""
+    from repro.fed.backends import RoundPlan
+
+    backend = AsyncBackend(_degenerate())
+    sess = FedSession(_cfg("fedtt"), TASK, backend=backend, n_clients=3,
+                      n_rounds=2, local_steps=1, batch_size=8,
+                      train_per_client=16, eval_n=16, lr=1e-2, seed=0)
+    rng, trainable, _ = sess._setup()
+    full = sess._plan_round(0, rng)
+    ragged = RoundPlan(selected=full.selected[:2], batch_idx=full.batch_idx[:2])
+    with pytest.raises(ValueError, match="explicit"):
+        backend.run_rounds(sess, trainable, [full, ragged], 0)
+    # explicit counts accept ragged windows
+    explicit = AsyncBackend(AsyncConfig(alpha=0.0, buffer_size=2,
+                                        concurrency=2))
+    _, kbs, _ = explicit.run_rounds(sess, trainable, [full, ragged], 0)
+    assert sum(explicit.staleness_hist.values()) == 5
+
+
+def test_invalid_counts_rejected():
+    """Negative buffer/concurrency must fail loudly (a negative concurrency
+    would otherwise dispatch nothing and 'succeed' untrained)."""
+    with pytest.raises(ValueError, match="concurrency"):
+        AsyncBackend(AsyncConfig(concurrency=-1))
+    with pytest.raises(ValueError, match="buffer_size"):
+        AsyncBackend(AsyncConfig(buffer_size=-2))
+    # 0/None mean "selection-size default"
+    AsyncBackend(AsyncConfig(buffer_size=0, concurrency=None))
+    # negative straggler severities would run the virtual clock backwards
+    with pytest.raises(ValueError, match="straggler_param"):
+        client_speeds(4, AsyncConfig(straggler="uniform",
+                                     straggler_param=-2.0), 0)
+    # a negative discount exponent would amplify stale updates
+    with pytest.raises(ValueError, match="alpha"):
+        AsyncBackend(AsyncConfig(alpha=-1.0))
+
+
+def test_run_round_rejects_multi_flush_plans():
+    """The single-round API cannot report multiple flush ledger entries --
+    and must refuse BEFORE simulating (no clock/stats/key-stream damage)."""
+    backend = AsyncBackend(AsyncConfig(buffer_size=1))
+    sess = FedSession(_cfg("fedtt"), TASK, backend=backend, n_clients=2,
+                      n_rounds=1, local_steps=1, batch_size=8,
+                      train_per_client=16, eval_n=16, lr=1e-2, seed=0)
+    rng, trainable, _ = sess._setup()
+    with pytest.raises(ValueError, match="run_rounds"):
+        backend.run_round(sess, trainable, sess._plan_round(0, rng), 0)
+    assert backend.buffer_flushes == 0 and backend.sim_time == 0.0
+    # full-buffer plans flush exactly once and work through run_round
+    backend2 = AsyncBackend(_degenerate())
+    tr, kb, stages = backend2.run_round(sess, trainable,
+                                        sess._plan_round(1, rng), 0)
+    assert kb > 0 and backend2.buffer_flushes == 1
+
+
+# ---------------------------------------------------------------------------
+# Property: staleness weights (monotonicity / normalization)
+# ---------------------------------------------------------------------------
+
+def test_staleness_weight_spot_checks():
+    assert staleness_weight(0, 0.0) == staleness_weight(7, 0.0) == 1.0
+    assert staleness_weight(0, 0.5) == 1.0
+    assert staleness_weight(3, 1.0) == pytest.approx(0.25)
+    with pytest.raises(ValueError):
+        staleness_weight(-1, 0.5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(min_value=0, max_value=1000),
+       st.floats(min_value=0.0, max_value=8.0, allow_nan=False))
+def test_staleness_weight_monotone_bounded(s, alpha):
+    """(1+s)^-alpha lies in (0, 1], is nonincreasing in s, and alpha=0 is
+    the uniform (FedAvg) limit."""
+    w = staleness_weight(s, alpha)
+    assert 0.0 < w <= 1.0
+    assert staleness_weight(s + 1, alpha) <= w
+    assert staleness_weight(s, 0.0) == 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(min_value=0.01, max_value=1.0, allow_nan=False),
+                min_size=1, max_size=6),
+       st.floats(min_value=-3.0, max_value=3.0, allow_nan=False),
+       st.floats(min_value=0.25, max_value=4.0, allow_nan=False))
+def test_weighted_delta_normalization(weights, value, lr):
+    """apply_weighted_deltas normalizes per leaf: when every contributor
+    sends the SAME delta, the result is t + server_lr * delta regardless of
+    the (positive) staleness weights."""
+    t = {"w": jnp.zeros((3,))}
+    d = {"w": jnp.full((3,), value)}
+    mask = {"w": True}
+    out = apply_weighted_deltas(t, [d] * len(weights), [mask] * len(weights),
+                                weights, server_lr=lr)
+    np.testing.assert_allclose(np.asarray(out["w"]),
+                               np.full((3,), lr * value), rtol=1e-5,
+                               atol=1e-6)
+
+
+def test_weighted_delta_per_leaf_normalization_and_frozen():
+    """Per-LEAF normalization: a leaf only one buffered client communicated
+    gets that client's full delta (not delta / buffer_len); leaves nobody
+    communicated keep the server value bit-for-bit."""
+    t = {"a": jnp.zeros((2,)), "b": jnp.ones((2,)), "c": jnp.ones((2,))}
+    d1 = {"a": jnp.full((2,), 2.0), "b": jnp.full((2,), 5.0),
+          "c": jnp.full((2,), 9.0)}
+    d2 = {"a": jnp.full((2,), 4.0), "b": jnp.zeros((2,)),
+          "c": jnp.full((2,), 9.0)}
+    m1 = {"a": True, "b": True, "c": False}
+    m2 = {"a": True, "b": False, "c": False}
+    out = apply_weighted_deltas(t, [d1, d2], [m1, m2], [1.0, 1.0])
+    np.testing.assert_allclose(np.asarray(out["a"]), 3.0)   # mean of 2, 4
+    np.testing.assert_allclose(np.asarray(out["b"]), 6.0)   # 1 + d1 alone
+    np.testing.assert_array_equal(np.asarray(out["c"]), np.ones((2,)))
+    # staleness discount shifts the mean toward the fresh client
+    out = apply_weighted_deltas(t, [d1, d2], [m1, m2],
+                                [staleness_weight(3, 1.0),  # stale: w=1/4
+                                 staleness_weight(0, 1.0)])  # fresh: w=1
+    np.testing.assert_allclose(np.asarray(out["a"]), (0.25 * 2 + 4) / 1.25)
+    with pytest.raises(ValueError):
+        apply_weighted_deltas(t, [d1], [m1, m2], [1.0])
+
+
+# ---------------------------------------------------------------------------
+# Property: seed determinism of the virtual clock
+# ---------------------------------------------------------------------------
+
+def _async_run(seed, speed_seed=0, straggler="lognormal"):
+    backend = AsyncBackend(AsyncConfig(buffer_size=2, alpha=0.5,
+                                       straggler=straggler,
+                                       straggler_param=1.0,
+                                       speed_seed=speed_seed))
+    res = FedSession(_cfg("fedtt"), TASK, backend=backend, n_clients=4,
+                     n_rounds=2, local_steps=1, batch_size=8,
+                     train_per_client=16, eval_n=16, lr=1e-2, seed=seed,
+                     eval_every=0).run()
+    return res, backend
+
+
+@settings(max_examples=5, deadline=None)
+@given(st.integers(min_value=0, max_value=50))
+def test_async_seed_determinism(seed):
+    """Same AsyncConfig + seed => identical arrival order (staleness_hist),
+    ledger, and bit-identical final trainables."""
+    r1, b1 = _async_run(seed)
+    r2, b2 = _async_run(seed)
+    assert r1.staleness_hist == r2.staleness_hist
+    assert b1.sim_time == b2.sim_time
+    assert r1.comm.uplink_kb_per_round == r2.comm.uplink_kb_per_round
+    for a, b in zip(jax.tree.leaves(r1.trainable),
+                    jax.tree.leaves(r2.trainable)):
+        assert jnp.array_equal(a, b)
+
+
+def test_async_seed_determinism_spot():
+    r1, b1 = _async_run(3)
+    r2, b2 = _async_run(3)
+    assert r1.staleness_hist == r2.staleness_hist and b1.sim_time == b2.sim_time
+    for a, b in zip(jax.tree.leaves(r1.trainable),
+                    jax.tree.leaves(r2.trainable)):
+        assert jnp.array_equal(a, b)
+    # a different speed seed reorders arrivals (distinct simulation)
+    r3, b3 = _async_run(3, speed_seed=7)
+    assert b3.sim_time != b1.sim_time
+
+
+def test_client_speeds_distributions():
+    cfg_by = {name: AsyncConfig(straggler=name, straggler_param=1.0)
+              for name in STRAGGLER_DISTS}
+    assert np.array_equal(client_speeds(8, cfg_by["homogeneous"], 0),
+                          np.ones(8))
+    for name in ("uniform", "lognormal", "pareto"):
+        sp = client_speeds(64, cfg_by[name], 0)
+        assert sp.shape == (64,) and (sp > 0).all()
+        assert len(np.unique(sp)) > 1
+        # deterministic in (seed, speed_seed)
+        assert np.array_equal(sp, client_speeds(64, cfg_by[name], 0))
+        assert not np.array_equal(sp, client_speeds(64, cfg_by[name], 1))
+    assert (client_speeds(64, cfg_by["uniform"], 0) >= 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# Property: int8 channel round trip + wire-byte additivity
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=1, max_value=64),
+       st.floats(min_value=1e-4, max_value=10.0, allow_nan=False),
+       st.integers(min_value=0, max_value=2 ** 31 - 1))
+def test_int8_roundtrip_error_bound(n, scale, seed):
+    """The decoded int8 delta stays within the channel's own error_bound
+    (max|x|/254 per tensor) for arbitrary shapes/scales/seeds."""
+    delta = {"w": scale * jax.random.normal(jax.random.key(seed), (n,))}
+    mask = {"w": True}
+    stack = ChannelStack([Int8DeltaChannel()])
+    out, wire, _ = stack.uplink(delta, mask)
+    bound = stack.error_bound(delta, mask)
+    assert bound is not None
+    err = float(jnp.max(jnp.abs(out["w"] - delta["w"])))
+    assert err <= bound + 1e-7
+    assert wire == n + 4
+
+
+def test_int8_roundtrip_error_bound_spot():
+    delta = {"w": 0.3 * jax.random.normal(jax.random.key(1), (257,)),
+             "frozen": jnp.ones((5,))}
+    mask = {"w": True, "frozen": False}
+    stack = ChannelStack([Int8DeltaChannel()])
+    out, wire, _ = stack.uplink(delta, mask)
+    err = float(jnp.max(jnp.abs(out["w"] - delta["w"])))
+    assert err <= stack.error_bound(delta, mask) + 1e-7
+    # frozen leaves pass through untouched and cost no bytes
+    assert jnp.array_equal(out["frozen"], delta["frozen"])
+    assert wire == 257 + 4
+    # identity stacks are lossless (bound 0); noise stacks are unbounded
+    assert ChannelStack([IdentityFP32()]).error_bound(delta, mask) == 0.0
+    assert ChannelStack(
+        [DPGaussianChannel(sigma=0.1)]).error_bound(delta, mask) is None
+    # two lossy bounded stages: the input-based figure would be unsound, so
+    # no bound is claimed
+    assert ChannelStack([Int8DeltaChannel(), Int8DeltaChannel()]
+                        ).error_bound(delta, mask) is None
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.integers(min_value=1, max_value=40), min_size=1,
+                max_size=5),
+       st.lists(st.booleans(), min_size=5, max_size=5),
+       st.booleans(), st.booleans())
+def test_stage_kb_additivity_arbitrary_stacks(sizes, mask_bits, with_fp32,
+                                              with_dp):
+    """For an arbitrary stage stack over arbitrary leaves/masks: every
+    stage's reported bytes equals that stage's own accounting, the stack
+    wire figure is the LAST re-encoder's, and the CommLog total is the sum
+    of its per-flush entries (ledger additivity)."""
+    tree = {f"l{i}": jnp.ones((s,)) for i, s in enumerate(sizes)}
+    mask = {f"l{i}": bool(mask_bits[i]) for i in range(len(sizes))}
+    stages = ([IdentityFP32()] if with_fp32 else []) + [Int8DeltaChannel()] \
+        + ([DPGaussianChannel(sigma=0.1)] if with_dp else [])
+    stack = ChannelStack(stages)
+    wire, per_stage = stack.account(tree, mask)
+    n_sent = sum(s for i, s in enumerate(sizes) if mask_bits[i])
+    n_tensors = sum(1 for b in mask_bits[:len(sizes)] if b)
+    assert per_stage["int8"] == n_sent + 4 * n_tensors
+    assert wire == per_stage["int8"]                 # last re-encoder wins
+    if with_fp32:
+        assert per_stage["fp32"] == 4 * n_sent
+    for s in stages:
+        b = s.wire_bytes(tree, mask)
+        if b is not None:
+            assert per_stage[s.name] == b
+    log = CommLog()
+    for kb in (wire / 1024, wire / 1024, 0.5):
+        log.record(kb, stages={"int8": kb})
+    assert log.total_kb == pytest.approx(sum(log.uplink_kb_per_round))
+    assert len(log.stage_kb["int8"]) == 3
+
+
+def test_stage_kb_additivity_spot():
+    tree = {"a": jnp.ones((100,)), "b": jnp.ones((7,))}
+    mask = {"a": True, "b": True}
+    stack = ChannelStack([IdentityFP32(), Int8DeltaChannel(),
+                          DPGaussianChannel(sigma=0.1)])
+    wire, per_stage = stack.account(tree, mask)
+    assert per_stage == {"fp32": 428, "int8": 115}   # noise re-encodes nothing
+    assert wire == 115
+    assert stack.stage_names == ("fp32", "int8", "dp_noise")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis shim wiring
+# ---------------------------------------------------------------------------
+
+def test_property_suite_degrades_without_hypothesis():
+    """When hypothesis is absent the @given tests above must be SKIPPED
+    placeholders (not silently dropped); when present they run for real."""
+    if HAVE_HYPOTHESIS:
+        assert callable(test_int8_roundtrip_error_bound)
+    else:
+        marks = getattr(test_int8_roundtrip_error_bound, "pytestmark", [])
+        assert any(m.name == "skip" for m in marks)
