@@ -1,0 +1,177 @@
+"""Cross-device scale benchmark: population sweep at fixed cohort.
+
+The claim under test (DESIGN.md §12): with the streaming client pool
+(``fed/pool.py``) and the two-tier hierarchical executor (``fed/hier.py``),
+simulated cost is a function of the COHORT, not the population -- growing
+the client population 10k -> 1M at a fixed 64-client cohort must leave peak
+host memory near-flat (acceptance: <= 1.5x) and round throughput unchanged,
+while the per-tier ledger splits the wire into the many cheap client->edge
+links (int8) and the few edge->server links (fp32).
+
+Each population runs in its OWN subprocess (``--single``): peak RSS
+(``getrusage ru_maxrss``) is process-monotone, so sweeping three
+populations in one process would report the max of the three for all of
+them.  The parent collects one JSON line per child and writes
+``BENCH_crossdevice.json`` -- the cross-device point of the perf
+trajectory; render with ``python scripts/render_experiments.py
+crossdevice``.
+
+    PYTHONPATH=src python benchmarks/bench_crossdevice.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import subprocess
+import sys
+import time
+
+if __package__ in (None, ""):             # `python benchmarks/bench_crossdevice.py`
+    import pathlib
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.common import row, tiny, write_bench_json
+
+COHORT = 64
+N_EDGES = 4
+POPULATIONS = [10_000, 100_000, 1_000_000]
+SMOKE_POPULATIONS = [1_000, 10_000]
+
+
+def _measure_single(population: int, cohort: int, rounds: int,
+                    warmup: int) -> dict:
+    """One population config, meant to run in a fresh process: build a
+    hierarchical population session, time `rounds` rounds after `warmup`,
+    report peak RSS + throughput + per-tier wire KB."""
+    import resource
+
+    import jax
+
+    from repro.data.synthetic import ClassificationTask
+    from repro.fed.api import FedSession
+    from repro.fed.channel import Int8DeltaChannel
+    from repro.fed.hier import HierBackend, HierarchicalTopology
+
+    task = ClassificationTask(n_classes=2, vocab=256, seq_len=8, seed=0,
+                              signal=0.5)
+    # int8 on the many client->edge links, fp32 identity edge->server: the
+    # per-tier ledger resolves the asymmetry
+    backend = HierBackend(HierarchicalTopology(n_edges=N_EDGES))
+    sess = FedSession(tiny("fedtt"), task, backend=backend,
+                      channel=[Int8DeltaChannel()], population=population,
+                      n_clients=cohort, n_rounds=rounds + warmup,
+                      local_steps=1, batch_size=2, train_per_client=16,
+                      eval_n=32, lr=1e-2, seed=0, eval_every=0)
+    rng, trainable, _ = sess._setup()
+    stage_acc: dict = {}
+
+    def run_chunked(trainable, start, n):
+        t = start
+        while t < start + n:
+            chunk = min(backend.window, start + n - t)
+            plans = [sess._plan_round(t + i, rng) for i in range(chunk)]
+            sess._materialize(plans)
+            trainable, _, stage_list = backend.run_rounds(
+                sess, trainable, plans, t)
+            for stages in stage_list:
+                for k, v in stages.items():
+                    stage_acc.setdefault(k, []).append(v)
+            t += chunk
+        return trainable
+
+    trainable = run_chunked(trainable, 0, warmup)
+    jax.block_until_ready(jax.tree.leaves(trainable)[0])
+    t0 = time.perf_counter()
+    trainable = run_chunked(trainable, warmup, rounds)
+    jax.block_until_ready(jax.tree.leaves(trainable)[0])
+    dt = time.perf_counter() - t0
+
+    edge_kb = float(sum(stage_acc["edge_uplink"]) / len(stage_acc["edge_uplink"]))
+    server_kb = float(sum(stage_acc["server_uplink"])
+                      / len(stage_acc["server_uplink"]))
+    # ru_maxrss: KB on Linux
+    peak_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024
+    return {"population": population, "cohort": cohort, "n_edges": N_EDGES,
+            "rounds_measured": rounds, "ms_per_round": dt / rounds * 1e3,
+            "rounds_per_sec": rounds / dt, "peak_rss_mb": peak_mb,
+            "edge_kb_per_client": edge_kb, "server_kb_per_edge": server_kb,
+            "round_wire_kb_total": edge_kb * cohort + server_kb * N_EDGES,
+            "shards_generated": sess.stream_pool.generated}
+
+
+def _spawn(population: int, cohort: int, rounds: int, warmup: int) -> dict:
+    """Run one config in a subprocess (clean per-config peak RSS) and parse
+    its single JSON stdout line."""
+    cmd = [sys.executable, __file__, "--single", "--population",
+           str(population), "--cohort", str(cohort), "--rounds", str(rounds),
+           "--warmup", str(warmup)]
+    out = subprocess.run(cmd, check=True, capture_output=True, text=True)
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+def summarize(results: list[dict]) -> dict:
+    smallest = min(results, key=lambda r: r["population"])
+    largest = max(results, key=lambda r: r["population"])
+    ratio = largest["peak_rss_mb"] / smallest["peak_rss_mb"]
+    return {"populations": [r["population"] for r in results],
+            "peak_rss_mb": [round(r["peak_rss_mb"], 1) for r in results],
+            "mem_ratio_largest_over_smallest": ratio,
+            # acceptance: O(cohort) streaming keeps memory near-flat across
+            # a 100x population sweep
+            "flat_memory_within_1p5x": bool(ratio <= 1.5)}
+
+
+def run(smoke: bool = False, out_json: str | None = None) -> dict:
+    if out_json is None:
+        out_json = ("BENCH_crossdevice.smoke.json" if smoke
+                    else "BENCH_crossdevice.json")
+    populations = SMOKE_POPULATIONS if smoke else POPULATIONS
+    cohort = 16 if smoke else COHORT
+    rounds = 2 if smoke else 6
+    warmup = 1 if smoke else 2
+
+    results = []
+    for pop in populations:
+        rec = _spawn(pop, cohort, rounds, warmup)
+        results.append(rec)
+        row(f"crossdevice[pop={pop}][{cohort}c]", rec["ms_per_round"] * 1e3,
+            f"peak_rss_mb={rec['peak_rss_mb']:.0f} "
+            f"edge_kb={rec['edge_kb_per_client']:.1f} "
+            f"server_kb={rec['server_kb_per_edge']:.1f}")
+
+    payload = {"meta": {"config": "tiny-encoder/fedtt", "cohort": cohort,
+                        "n_edges": N_EDGES, "smoke": smoke,
+                        "edge_channel": "int8", "server_channel": "fp32",
+                        "backend": "hier"},
+               "results": results,
+               "summary": summarize(results)}
+    write_bench_json(out_json, payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="small populations / cohort for CI (separate "
+                         "output path)")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--single", action="store_true",
+                    help="measure ONE population in this process and print "
+                         "a JSON line (used by the parent sweep)")
+    ap.add_argument("--population", type=int, default=None)
+    ap.add_argument("--cohort", type=int, default=COHORT)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--warmup", type=int, default=2)
+    args = ap.parse_args(argv)
+    if args.single:
+        rec = _measure_single(args.population, args.cohort, args.rounds,
+                              args.warmup)
+        print(json.dumps(rec))
+        return 0
+    run(smoke=args.smoke, out_json=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

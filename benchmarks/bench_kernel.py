@@ -110,15 +110,22 @@ def run(batch: int | None = None, reps: int | None = None,
         batch = 512 if smoke else 4096
     if reps is None:
         reps = 2 if smoke else 5
+    interpret = jax.default_backend() != "tpu"
     if out_json is None:
         out_json = "BENCH_kernel.smoke.json" if smoke else "BENCH_kernel.json"
+        if interpret and ".smoke." not in out_json:
+            # interpret-mode numbers never overwrite the committed
+            # trajectory (write_bench_json enforces this for explicit paths)
+            print("# pallas interpret mode: redirecting to "
+                  "BENCH_kernel.smoke.json")
+            out_json = "BENCH_kernel.smoke.json"
     shapes = [(768, 64)] if smoke else [(768, 64), (4096, 64)]
     results: list[dict] = []
     for (p, q) in shapes:
         _bench_shape(p, q, batch, reps, results)
     payload = {"meta": {"batch": batch, "reps": reps, "smoke": smoke,
                         "backend": jax.default_backend(),
-                        "pallas_interpret": jax.default_backend() != "tpu"},
+                        "pallas_interpret": interpret},
                "results": results}
     write_bench_json(out_json, payload)
     return results

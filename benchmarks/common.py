@@ -66,9 +66,19 @@ def time_us(fn, reps: int) -> float:
 def write_bench_json(path: str, payload: dict) -> str:
     """Persist a benchmark result dict as the BENCH_*.json perf trajectory
     (EXPERIMENTS.md §Perf tables are rendered from these via
-    scripts/render_experiments.py)."""
+    scripts/render_experiments.py).
+
+    Guard: interpret-mode numbers (``meta.pallas_interpret`` true -- Pallas
+    emulated off-TPU, orders of magnitude slow) must never land on a
+    committed trajectory path; they only go to ``*.smoke.*`` files (CI
+    artifacts)."""
     import json
 
+    if payload.get("meta", {}).get("pallas_interpret") and ".smoke." not in path:
+        raise ValueError(
+            f"refusing to write interpret-mode (non-TPU) results to the "
+            f"committed trajectory path {path!r}; interpret numbers are not "
+            f"comparable -- use a *.smoke.* output path")
     with open(path, "w") as f:
         json.dump(payload, f, indent=1, sort_keys=True)
         f.write("\n")

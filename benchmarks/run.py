@@ -12,9 +12,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_comm_cost, bench_dp, bench_extensions,
-                        bench_glue_fedtt, bench_heterogeneity, bench_kernel,
-                        bench_rank_sweep, bench_roofline)
+from benchmarks import (bench_comm_cost, bench_crossdevice, bench_dp,
+                        bench_extensions, bench_glue_fedtt,
+                        bench_heterogeneity, bench_kernel, bench_rank_sweep,
+                        bench_roofline)
 
 SUITES = {
     "comm_cost": bench_comm_cost.run,        # Tables 5, 6, 14, 15
@@ -25,6 +26,7 @@ SUITES = {
     "dp": bench_dp.run,                      # Table 4
     "roofline": bench_roofline.run,          # §Roofline (reads dry-run JSON)
     "extensions": bench_extensions.run,      # beyond-paper: hetero-rank + int8
+    "crossdevice": bench_crossdevice.run,    # DESIGN.md §12 population sweep
 }
 
 

@@ -187,8 +187,43 @@ def serve_table(path="BENCH_serve.json"):
     return "\n".join(lines)
 
 
+def crossdevice_table(path="BENCH_crossdevice.json"):
+    """The EXPERIMENTS.md §Cross-device table: population sweep at fixed
+    cohort -- peak RSS (the O(cohort) streaming claim), throughput, and the
+    per-tier wire split of the hierarchical executor."""
+    with open(path) as f:
+        data = json.load(f)
+    meta = data["meta"]
+    lines = [f"Measured with backend=`{meta['backend']}` "
+             f"(edges={meta['n_edges']}, edge=`{meta['edge_channel']}`, "
+             f"server=`{meta['server_channel']}`), "
+             f"config=`{meta['config']}`, cohort={meta['cohort']}; one "
+             f"subprocess per population (clean peak RSS).",
+             "",
+             "| population | peak RSS MB | ms/round | rounds/s | "
+             "edge KB/client | server KB/edge | round wire KB |",
+             "|---|---|---|---|---|---|---|"]
+    for r in sorted(data["results"], key=lambda r: r["population"]):
+        lines.append(
+            f"| {r['population']:,} | {r['peak_rss_mb']:.0f} | "
+            f"{r['ms_per_round']:.0f} | {r['rounds_per_sec']:.2f} | "
+            f"{r['edge_kb_per_client']:.1f} | "
+            f"{r['server_kb_per_edge']:.1f} | "
+            f"{r['round_wire_kb_total']:.0f} |")
+    s = data["summary"]
+    lines += ["", f"Peak-memory ratio largest/smallest population: "
+              f"{s['mem_ratio_largest_over_smallest']:.2f}x "
+              f"(acceptance <= 1.5x: "
+              f"{'PASS' if s['flat_memory_within_1p5x'] else 'FAIL'})."]
+    return "\n".join(lines)
+
+
 if __name__ == "__main__":
     which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which == "crossdevice":
+        print(crossdevice_table(sys.argv[2] if len(sys.argv) > 2
+                                else "BENCH_crossdevice.json"))
+        sys.exit(0)
     if which == "kernel":
         print(kernel_table(sys.argv[2] if len(sys.argv) > 2
                            else "BENCH_kernel.json"))

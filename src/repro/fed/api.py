@@ -41,9 +41,13 @@ from repro.data.synthetic import ClassificationTask, label_skew_partition
 from repro.fed import dp as dp_lib
 from repro.fed.async_exec import AsyncConfig
 from repro.fed.backends import Backend, RoundPlan, get_backend
-from repro.fed.channel import Channel, ChannelStack, get_channel
+from repro.fed.channel import (Channel, ChannelStack, DPGaussianChannel,
+                               get_channel)
 from repro.fed.comm import CommLog
-from repro.fed.samplers import ClientSampler, get_sampler
+from repro.fed.pool import StreamingClientPool
+from repro.fed.privacy import DPAccountant
+from repro.fed.samplers import (ClientSampler, CohortSampler, FractionSampler,
+                                get_sampler)
 from repro.fed.strategies import Strategy, count_true, get_strategy
 from repro.models.transformer import classifier_init, forward_classify, model_init
 from repro.optim import adamw
@@ -74,6 +78,12 @@ class FedResult:
     #: async executor only: number of server aggregations (buffer flushes);
     #: each flush is one ``comm`` ledger entry
     buffer_flushes: int | None = None
+    #: DP runs only: privacy spent over the whole run, measured by the
+    #: subsampled-Gaussian RDP accountant (``fed/privacy.py``) at the run's
+    #: actual subsampling rate -- cohort/population for ``population=`` runs,
+    #: so growing the population tightens eps at fixed cohort
+    dp_eps: float | None = None
+    dp_delta: float | None = None
 
     def export_adapter(self) -> dict:
         """fed -> serve export: the aggregated PEFT pytree in the layout
@@ -116,14 +126,30 @@ class FedSession:
                  train_per_client: int = 128, eval_n: int = 256,
                  hetero_proportions=None, hetero_alpha: float | None = None,
                  local_dp: LocalDP | None = None, seed: int = 0,
-                 eval_every: int = 1):
+                 eval_every: int = 1, population: int | None = None,
+                 privacy_delta: float = 1e-5):
         self.cfg = cfg
         self.task = task
         self.strategy = (get_strategy(cfg.peft.method, cfg) if strategy is None
                          else get_strategy(strategy, cfg))
-        self.sampler = get_sampler(sampler)
         self.channel = get_channel(channel)
         self.backend = get_backend(backend)
+        self.population = None if population is None else int(population)
+        if self.population is not None:
+            if self.population < n_clients:
+                raise ValueError(
+                    f"population={self.population} smaller than the cohort "
+                    f"(n_clients={n_clients})")
+            if self.backend.name == "async":
+                raise ValueError(
+                    "backend='async' simulates materialized per-client "
+                    "speeds and is incompatible with population= streaming; "
+                    "use loop/scan/hier")
+            # cross-device default: a fixed cohort of n_clients drawn
+            # uniformly from the population each round (O(cohort) sampling)
+            if sampler is None:
+                sampler = CohortSampler(n_clients)
+        self.sampler = get_sampler(sampler)
         self.n_clients = n_clients
         self.n_rounds = n_rounds
         self.local_steps = local_steps
@@ -134,6 +160,9 @@ class FedSession:
         self.hetero_proportions = hetero_proportions
         self.hetero_alpha = hetero_alpha
         self.local_dp = local_dp
+        #: target delta when reporting central-DP spend for a
+        #: DPGaussianChannel stack (local_dp carries its own delta)
+        self.privacy_delta = float(privacy_delta)
         self.seed = seed
         #: evaluate every E rounds (plus always the final round); 0 = final
         #: round only.  Fused backends (scan) align their windows to eval
@@ -150,6 +179,8 @@ class FedSession:
         self._opt_template = None
         self._shard_sizes = None
         self._shard_matrix = None
+        #: population mode only: the per-cohort shard generator
+        self.stream_pool = None
 
     # ------------------------------------------------------------------
     def _setup(self):
@@ -163,30 +194,40 @@ class FedSession:
             "peft": params["peft"],
             "classifier": classifier_init(kc, self.cfg, self.task.n_classes)}
 
-        pool = self.task.sample(self.n_clients * self.train_per_client,
-                                seed_offset=1)
-        labels_np = np.asarray(pool["labels"])
-        self.pool = pool
+        if self.population is not None:
+            # cross-device: no population-sized pool exists.  Shards stream
+            # per cohort from (seed, client_id); _materialize builds each
+            # chunk's device pool just before the backend runs it.
+            self.stream_pool = StreamingClientPool(
+                self.task, self.population, self.train_per_client,
+                seed=self.seed, alpha=self.hetero_alpha)
+        else:
+            pool = self.task.sample(self.n_clients * self.train_per_client,
+                                    seed_offset=1)
+            labels_np = np.asarray(pool["labels"])
+            self.pool = pool
 
-        def gather(idx):
-            return jax.tree.map(lambda x: x[idx], pool)
+            def gather(idx):
+                return jax.tree.map(lambda x: x[idx], pool)
 
-        # one batch-gather closure for the whole run (the loop backend calls
-        # it once per (client, step) instead of rebuilding the tree.map)
-        self.pool_gather = gather
-        self.shards = label_skew_partition(
-            labels_np, self.n_clients, proportions=self.hetero_proportions,
-            alpha=self.hetero_alpha, seed=self.seed)
-        self.sampler.bind([len(s) for s in self.shards])
-        # padded (n_clients, max_shard) index matrix for the vectorized
-        # per-round batch draw (_plan_round); positions are always < size,
-        # so the zero padding is never read
-        self._shard_sizes = np.array([len(s) for s in self.shards])
-        mat = np.zeros((self.n_clients, int(self._shard_sizes.max())),
-                       dtype=np.int64)
-        for ci, s in enumerate(self.shards):
-            mat[ci, :len(s)] = s
-        self._shard_matrix = mat
+            # one batch-gather closure for the whole run (the loop backend
+            # calls it once per (client, step) instead of rebuilding the
+            # tree.map)
+            self.pool_gather = gather
+            self.shards = label_skew_partition(
+                labels_np, self.n_clients,
+                proportions=self.hetero_proportions,
+                alpha=self.hetero_alpha, seed=self.seed)
+            self.sampler.bind([len(s) for s in self.shards])
+            # padded (n_clients, max_shard) index matrix for the vectorized
+            # per-round batch draw (_plan_round); positions are always
+            # < size, so the zero padding is never read
+            self._shard_sizes = np.array([len(s) for s in self.shards])
+            mat = np.zeros((self.n_clients, int(self._shard_sizes.max())),
+                           dtype=np.int64)
+            for ci, s in enumerate(self.shards):
+                mat[ci, :len(s)] = s
+            self._shard_matrix = mat
         eval_batch = self.task.sample(self.eval_n, seed_offset=2)
 
         cfg, task = self.cfg, self.task
@@ -218,7 +259,21 @@ class FedSession:
         behaviour the per-client ``rng.choice`` loop already had for shards
         smaller than the batch, now uniform for all shard sizes so the draw
         vectorizes.  ``tests/test_fed_api.py::test_plan_round_pinned`` pins
-        the round-0 plan for the default seed."""
+        the round-0 plan for the default seed.
+
+        Population mode: ids are drawn from ``range(population)`` and the
+        plan carries shard-relative ``positions`` only -- ``_materialize``
+        resolves them into ``batch_idx`` once the chunk's cohort pool
+        exists."""
+        if self.population is not None:
+            selected = np.asarray(self.sampler.select(
+                round_idx, self.population, rng))
+            u = rng.random((len(selected), self.local_steps,
+                            self.batch_size))
+            pos = np.minimum((u * self.train_per_client).astype(np.int64),
+                             self.train_per_client - 1)
+            return RoundPlan(selected=selected, batch_idx=None,
+                             positions=pos)
         selected = np.asarray(self.sampler.select(round_idx, self.n_clients,
                                                   rng))
         sizes = self._shard_sizes[selected][:, None, None]
@@ -226,6 +281,29 @@ class FedSession:
         pos = np.minimum((u * sizes).astype(np.int64), sizes - 1)
         batch_idx = self._shard_matrix[selected[:, None, None], pos]
         return RoundPlan(selected=selected, batch_idx=batch_idx)
+
+    def _materialize(self, plans: list) -> None:
+        """Population mode: build the chunk's cohort pool and resolve each
+        plan's shard-relative positions into pool rows.
+
+        The pool concatenates every plan's cohort shards in order -- plan
+        ``i``'s client at cohort position ``s`` owns slot ``i * n_sel + s``
+        -- so its shape is O(chunk x cohort x shard), independent of the
+        population, and constant across equal-length chunks (the fused scan
+        runner recompiles only for the run's final short chunk)."""
+        if self.population is None:
+            return
+        all_ids = np.concatenate([p.selected for p in plans])
+        pool = self.stream_pool.cohort_pool(all_ids)
+        slot = 0
+        for p in plans:
+            n_sel = len(p.selected)
+            slots = np.arange(slot, slot + n_sel)
+            p.batch_idx = (slots[:, None, None] * self.train_per_client
+                           + p.positions)
+            slot += n_sel
+        self.pool = pool
+        self.pool_gather = lambda idx: jax.tree.map(lambda x: x[idx], pool)
 
     def opt_template(self, view):
         """Shared zero optimizer state for the view-is-global case, built
@@ -247,6 +325,37 @@ class FedSession:
         if self.backend.fused and self.eval_every > 0:
             chunk = min(chunk, self.eval_every - (t % self.eval_every))
         return chunk
+
+    def _privacy_spent(self) -> tuple:
+        """(eps, delta) spent over the whole run per the subsampled-Gaussian
+        RDP accountant, or (None, None) for non-DP runs.
+
+        Per-step DP-SGD composes over every local step at the batch/shard
+        rate; a :class:`DPGaussianChannel` uplink stage (on the session
+        channel or either hierarchical hop) composes over rounds at the
+        cohort/population rate -- so the same cohort against a larger
+        population spends strictly less."""
+        if self.local_dp is not None and self.dp_sigma is not None:
+            q = min(1.0, self.batch_size / max(self.train_per_client, 1))
+            acct = DPAccountant(self.dp_sigma, q, delta=self.local_dp.delta)
+            acct.step(self.n_rounds * self.local_steps)
+            return acct.spent()
+        stacks = [self.channel]
+        if hasattr(self.backend, "_stacks"):   # hier: per-hop stacks
+            stacks.extend(self.backend._stacks(self))
+        stage = next((s for st in stacks for s in st.stages
+                      if isinstance(s, DPGaussianChannel)), None)
+        if stage is None or stage.sigma <= 0.0:
+            return None, None
+        if self.population is not None:
+            q = min(1.0, self.n_clients / self.population)
+        elif isinstance(self.sampler, FractionSampler):
+            q = self.sampler.fraction
+        else:
+            q = 1.0
+        acct = DPAccountant(stage.sigma, q, delta=self.privacy_delta)
+        acct.step(self.n_rounds)
+        return acct.spent()
 
     # ------------------------------------------------------------------
     def run(self) -> FedResult:
@@ -270,6 +379,7 @@ class FedSession:
         while t < self.n_rounds:
             chunk = self._chunk_len(t)
             plans = [self._plan_round(t + i, rng) for i in range(chunk)]
+            self._materialize(plans)
             global_trainable, kbs, stage_list = self.backend.run_rounds(
                 self, global_trainable, plans, t, eval_hook)
             for kb, stages in zip(kbs, stage_list):
@@ -281,6 +391,7 @@ class FedSession:
                 eval_rounds.extend(pending_rounds)
                 pending_acc, pending_rounds = [], []
 
+        dp_eps, dp_delta = self._privacy_spent()
         return FedResult(acc_history=acc_history, comm=comm,
                          n_trainable=n_trainable,
                          n_communicated_round0=n_comm0,
@@ -288,6 +399,7 @@ class FedSession:
                          trainable=global_trainable,
                          eval_rounds=eval_rounds,
                          backbone=self.backbone,
+                         dp_eps=dp_eps, dp_delta=dp_delta,
                          **self.backend.result_extras(self))
 
 

@@ -21,6 +21,11 @@ floating-point tolerance on the aggregated trainable pytree:
     the only NON-synchronous executor -- a virtual-clock FedBuff simulator
     where up-links arrive out of order and the server flushes a staleness-
     discounted buffer instead of waiting on a round barrier.
+  * ``HierBackend`` (``fed/hier.py``, registered as ``"hier"``): two-tier
+    cross-device aggregation -- E edge aggregators each FedAvg their cohort
+    slice on-device, the server merges the edge summaries, and every hop
+    runs its own :class:`~repro.fed.channel.ChannelStack` with a per-tier
+    ``CommLog`` ledger.
 
 A backend consumes the session's precomputed :class:`RoundPlan`\\ s (selected
 clients + batch indices), so all backends see identical data order and can
@@ -50,6 +55,10 @@ class RoundPlan:
     """Deterministic work order for one round (shared by all backends)."""
     selected: np.ndarray     # (n_sel,) client ids
     batch_idx: np.ndarray    # (n_sel, K, B) indices into the data pool
+    #: population mode only: per-client (K, B) positions WITHIN the client's
+    #: streamed shard; ``FedSession._materialize`` resolves them into
+    #: ``batch_idx`` rows of the chunk's cohort pool (``fed/pool.py``)
+    positions: np.ndarray | None = None
 
 
 @partial(jax.jit, static_argnames=("cfg", "n_classes", "optimizer", "clip",
@@ -340,7 +349,7 @@ class ScanBackend(Backend):
 
         global_trainable, self._opt_buf = self._runner(
             global_trainable, self._opt_buf, batch_idx, mask_mults,
-            stage_keys)
+            stage_keys, session.pool)
         if eval_hook is not None:
             # intermediate rounds are fused away; only the window's final
             # state is observable (the session aligns eval boundaries)
@@ -354,8 +363,15 @@ def _async_backend():
     return AsyncBackend()
 
 
+def _hier_backend():
+    # local import: fed/hier.py imports Backend from this module
+    from repro.fed.hier import HierBackend
+    return HierBackend()
+
+
 _BACKENDS = {"loop": LoopBackend, "sharded": ShardedBackend,
-             "scan": ScanBackend, "async": _async_backend}
+             "scan": ScanBackend, "async": _async_backend,
+             "hier": _hier_backend}
 
 
 def get_backend(spec) -> Backend:

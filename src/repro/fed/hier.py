@@ -1,0 +1,210 @@
+"""Two-tier hierarchical aggregation for cross-device scale (DESIGN.md §12).
+
+A flat federated round ships every sampled client's update straight to one
+server.  At cross-device scale the real systems (and both federated
+fine-tuning surveys in PAPERS.md) interpose *edge aggregators*: clients
+up-link to their edge, each edge FedAvgs its cohort slice, and only E edge
+summaries travel the expensive hop to the server.  This module builds that
+tree as a :class:`~repro.fed.backends.Backend`:
+
+  * :class:`HierarchicalTopology` describes the tree: ``n_edges`` and one
+    :class:`~repro.fed.channel.ChannelStack` PER HOP, so int8 quantization
+    and DP noise compose per tier (e.g. int8 on the many client->edge links,
+    fp32 on the few edge->server links).  ``edge_channel=None`` inherits the
+    session's channel for the client->edge hop; ``server_channel=None`` is
+    the identity wire.
+  * :class:`HierBackend` executes one round per edge as ONE jitted program
+    (reusing the scan executor's per-client round body,
+    ``roundrun.make_client_round``, with masks as 0/1 data so FedTT+/RoLoRA
+    cycling never recompiles): broadcast views, vmapped K-step local
+    updates, per-client edge-hop channel transform, masked FedAvg down to a
+    single edge delta.  The server then decodes each edge summary through
+    the server hop and applies the slice-size-weighted mean.
+  * The :class:`~repro.fed.comm.CommLog` grows a per-tier ledger:
+    ``stage_kb["edge_uplink"]`` (per-client client->edge KB, also the
+    round's headline ``uplink_kb`` figure -- comparable with the flat
+    backends) and ``stage_kb["server_uplink"]`` (per-edge edge->server KB),
+    plus ``"<tier>/<stage>"`` entries per channel stage.  Additivity --
+    ``edge_uplink * n_clients + server_uplink * n_edges`` equals the round's
+    total wire bytes -- is pinned by ``tests/test_crossdevice.py``.
+
+Degenerate parity: ``n_edges=1`` with the inherited edge channel and the
+identity server hop is exactly flat FedAvg -- one edge averages the whole
+cohort and forwards it unchanged -- and must match
+:class:`~repro.fed.backends.LoopBackend` leaf-for-leaf (pinned for fp32 AND
+int8 in ``tests/test_crossdevice.py``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.backends import Backend
+from repro.fed.channel import ChannelStack, get_channel
+from repro.fed.roundrun import make_client_round, stack_mask_mults
+
+
+@dataclasses.dataclass
+class HierarchicalTopology:
+    """The two-tier tree: E edges, one channel stack per hop.
+
+    ``None`` channels resolve at run time: the edge hop inherits the
+    session's channel (so ``FedSession(channel=[Int8DeltaChannel()],
+    backend="hier")`` quantizes the many client->edge links), the server
+    hop defaults to the identity wire."""
+    n_edges: int = 2
+    edge_channel: ChannelStack | None = None
+    server_channel: ChannelStack | None = None
+
+    def __post_init__(self):
+        if self.n_edges < 1:
+            raise ValueError(f"n_edges must be >= 1, got {self.n_edges}")
+        if self.edge_channel is not None:
+            self.edge_channel = get_channel(self.edge_channel)
+        self.server_channel = get_channel(self.server_channel)
+
+    def slices(self, n_sel: int) -> list[np.ndarray]:
+        """Contiguous cohort slices, one per edge (sizes differ by <= 1);
+        a cohort smaller than the edge set leaves the tail edges idle."""
+        n_edges = min(self.n_edges, n_sel)
+        return np.array_split(np.arange(n_sel), n_edges)
+
+
+class HierBackend(Backend):
+    """Two-tier hierarchical round executor (see module docstring).
+
+    Requires uniform client views (``strategy.supports_stacked``) and
+    device-safe channel stacks on both hops; per-step DP-SGD stays
+    loop-only.  Edge programs are jitted once per slice size (at most two
+    sizes per cohort) and cached per session."""
+
+    name = "hier"
+
+    def __init__(self, topology: HierarchicalTopology | None = None):
+        self.topology = (topology if topology is not None
+                         else HierarchicalTopology())
+        self._edge_runner = None
+        self._runner_sig = None
+        self._runner_session = None
+
+    # ------------------------------------------------------------------
+    def _stacks(self, session) -> tuple[ChannelStack, ChannelStack]:
+        edge = (self.topology.edge_channel
+                if self.topology.edge_channel is not None
+                else session.channel)
+        return edge, self.topology.server_channel
+
+    def incompatible_reason(self, session) -> str | None:
+        """Why this session cannot run hierarchically (None when it can)."""
+        if session.local_dp is not None:
+            return "per-step DP-SGD is loop-only"
+        if not session.strategy.supports_stacked:
+            return (f"strategy {session.strategy.name!r} uses per-client "
+                    "views/shapes; edge aggregation stacks uniform views -- "
+                    "use backend='loop'")
+        edge, server = self._stacks(session)
+        for tier, stack in (("edge", edge), ("server", server)):
+            if not stack.device_safe:
+                return (f"{tier} channel stack has a stage overriding "
+                        "transform() without transform_device(); the edge "
+                        "runner executes hops inside jit")
+        return None
+
+    def _build_edge_runner(self, session, edge_stack):
+        """One jitted program per (slice size): local updates + edge hop +
+        edge FedAvg for one edge's cohort slice."""
+        one_client_round = make_client_round(
+            session.cfg, session.task.n_classes, session.optimizer,
+            session.backbone)
+        optimizer = session.optimizer
+        transparent = edge_stack.transparent
+
+        def edge_round(trainable, batch_idx, mm, edge_keys, pool):
+            n_slice = batch_idx.shape[0]
+            views = jax.tree.map(
+                lambda x: jnp.broadcast_to(x[None], (n_slice,) + x.shape),
+                trainable)
+            opt0 = jax.tree.map(
+                lambda x: jnp.zeros((n_slice,) + x.shape, x.dtype),
+                optimizer.init(trainable))
+            batches = jax.tree.map(lambda x: x[batch_idx], pool)
+            new_tr, _ = jax.vmap(one_client_round, in_axes=(0, 0, 0, None))(
+                views, opt0, batches, mm)
+            delta = jax.tree.map(lambda a, b: a - b, new_tr, views)
+            if not transparent:
+                delta = jax.vmap(
+                    lambda d, ks: edge_stack.uplink_device(d, mm, ks))(
+                        delta, edge_keys)
+            # edge FedAvg of deltas; frozen leaves (mm=0) stay identically
+            # zero, matching "frozen leaves are not communicated"
+            return jax.tree.map(
+                lambda d, m: jnp.asarray(m, d.dtype) * jnp.mean(d, axis=0),
+                delta, mm)
+
+        return jax.jit(edge_round)
+
+    # ------------------------------------------------------------------
+    def run_round(self, session, global_trainable, plan, round_idx):
+        reason = self.incompatible_reason(session)
+        if reason is not None:
+            raise ValueError(reason)
+        edge_stack, server_stack = self._stacks(session)
+        strat = session.strategy
+        n_sel = len(plan.selected)
+        slices = self.topology.slices(n_sel)
+
+        mask = strat.mask(global_trainable, round_idx)
+        mm = stack_mask_mults([mask])
+        mm = jax.tree.map(lambda m: m[0], mm)          # (1,) -> scalar data
+
+        sig = (id(edge_stack), bool(edge_stack.key_stages))
+        if (self._edge_runner is None or self._runner_sig != sig
+                or self._runner_session is not session):
+            self._edge_runner = self._build_edge_runner(session, edge_stack)
+            self._runner_sig = sig
+            self._runner_session = session
+
+        # per-client edge-hop keys for the whole cohort, sliced per edge in
+        # cohort order (the same stream a flat sequential uplink would draw)
+        edge_keys = edge_stack.window_keys(1, n_sel)
+        edge_deltas = []
+        for sl in slices:
+            keys_sl = tuple(k[0][sl] for k in edge_keys)
+            edge_deltas.append(self._edge_runner(
+                global_trainable, jnp.asarray(plan.batch_idx[sl], jnp.int32),
+                mm, keys_sl, session.pool))
+
+        # server hop: each edge summary through the server stack (host
+        # path -- stateful stages draw their own keys), then the
+        # slice-size-weighted mean
+        mask_bools = jax.tree.map(lambda m: bool(m), mask)
+        agg = None
+        for sl, d in zip(slices, edge_deltas):
+            if not server_stack.transparent:
+                d, _, _ = server_stack.uplink(d, mask_bools)
+            w = len(sl) / n_sel
+            term = jax.tree.map(lambda x, w=w: w * x, d)
+            agg = term if agg is None else jax.tree.map(
+                lambda a, b: a + b, agg, term)
+        new_global = jax.tree.map(
+            lambda t, d, m: (t + jnp.asarray(m, t.dtype) * d).astype(t.dtype),
+            global_trainable, agg, mm)
+
+        # -- per-tier ledger (static shape-only accounting, zero syncs) -----
+        edge_wire, edge_stage = edge_stack.account(global_trainable, mask)
+        server_wire, server_stage = server_stack.account(global_trainable,
+                                                         mask)
+        stages = {"edge_uplink": edge_wire / 1024,
+                  "server_uplink": server_wire / 1024}
+        stages.update({f"edge_uplink/{n}": b / 1024
+                       for n, b in edge_stage.items()})
+        stages.update({f"server_uplink/{n}": b / 1024
+                       for n, b in server_stage.items()})
+        return new_global, edge_wire / 1024, stages
+
+
+__all__ = ["HierBackend", "HierarchicalTopology"]

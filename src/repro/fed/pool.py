@@ -1,0 +1,117 @@
+"""Streaming client pool for cross-device populations (DESIGN.md §12).
+
+Every synchronous backend consumes the session's data through two surfaces:
+a device-resident ``pool`` dict plus integer ``batch_idx`` rows into it.
+For cross-silo runs the session materializes one pool sized to the whole
+client set; at cross-device scale (10k .. 1M clients) that is exactly what
+cannot exist.  :class:`StreamingClientPool` replaces it with a *generator*:
+a client's local shard is a pure function of ``(population_seed,
+client_id)`` -- re-materializable anywhere, any time, in any cohort -- so a
+round only ever holds the sampled cohort's shards in memory:
+O(cohort x shard), never O(population).
+
+``FedSession(population=P)`` wires this in: the sampler draws client ids
+from ``range(P)``, and before each backend chunk the session concatenates
+the chunk's cohort shards into a fresh (constant-shape) device pool and
+rewrites the plans' batch indices against it (``FedSession._materialize``).
+
+Determinism contract (pinned by ``tests/test_crossdevice.py``): the shard
+for client ``c`` depends only on ``(task, seed, shard_size, alpha, c)`` --
+NOT on which other clients share the cohort, the round index, or how often
+``c`` was sampled before.  Optional per-client label skew draws each
+client's class distribution from Dirichlet(alpha) seeded the same way, so
+heterogeneity is also population-stable.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+
+import jax
+import numpy as np
+
+#: seed_offset base for per-client draws -- far above the session's
+#: materialized-pool (1) and eval (2) offsets so streams never collide
+_STREAM_OFFSET = 1_000
+#: client ids must stay below this for the (seed, client_id) -> seed_offset
+#: mixing to be collision-free across population seeds
+MAX_POPULATION = 1_000_003
+
+
+class StreamingClientPool:
+    """Per-cohort shard generator over a ``population`` of virtual clients.
+
+    ``client_shard(c)`` returns client ``c``'s local dataset (a dict of
+    ``(shard_size, ...)`` numpy arrays); ``cohort_pool(ids)`` concatenates a
+    cohort's shards into one device pool whose row layout is
+    ``row = slot * shard_size + j`` for slot = position of the client in
+    ``ids``.  A small LRU (``cache_clients`` shards) absorbs the
+    cohort-overlap between consecutive rounds without growing past
+    O(cache)."""
+
+    def __init__(self, task, population: int, shard_size: int,
+                 seed: int = 0, alpha: float | None = None,
+                 cache_clients: int = 512):
+        if population < 1:
+            raise ValueError(f"population must be >= 1, got {population}")
+        if population > MAX_POPULATION:
+            raise ValueError(
+                f"population {population} exceeds MAX_POPULATION="
+                f"{MAX_POPULATION} (the seed-mixing injectivity bound)")
+        if shard_size < 1:
+            raise ValueError(f"shard_size must be >= 1, got {shard_size}")
+        self.task = task
+        self.population = int(population)
+        self.shard_size = int(shard_size)
+        self.seed = int(seed)
+        self.alpha = None if alpha is None else float(alpha)
+        self._cache: OrderedDict[int, dict] = OrderedDict()
+        self._cache_max = int(cache_clients)
+        #: shards generated since construction (cache misses -- observable
+        #: cost of streaming; cache hits are free)
+        self.generated = 0
+
+    # ------------------------------------------------------------------
+    def _labels(self, client_id: int) -> np.ndarray:
+        """Client ``c``'s label draw -- optionally Dirichlet(alpha)-skewed,
+        always a pure function of (seed, client_id)."""
+        rng = np.random.default_rng([abs(self.seed), int(client_id), 0xC04])
+        n_classes = self.task.n_classes
+        if self.alpha is None:
+            return rng.integers(0, n_classes, size=self.shard_size)
+        p = rng.dirichlet([self.alpha] * n_classes)
+        return rng.choice(n_classes, size=self.shard_size, p=p)
+
+    def client_shard(self, client_id: int) -> dict:
+        """The (shard_size, ...) local dataset of one client (cached)."""
+        cid = int(client_id)
+        if not 0 <= cid < self.population:
+            raise IndexError(f"client id {cid} outside population "
+                             f"[0, {self.population})")
+        hit = self._cache.get(cid)
+        if hit is not None:
+            self._cache.move_to_end(cid)
+            return hit
+        shard = self.task.sample(
+            self.shard_size, labels=self._labels(cid),
+            seed_offset=_STREAM_OFFSET + self.seed * MAX_POPULATION + cid)
+        shard = {k: np.asarray(v) for k, v in shard.items()}
+        self.generated += 1
+        self._cache[cid] = shard
+        if len(self._cache) > self._cache_max:
+            self._cache.popitem(last=False)
+        return shard
+
+    def cohort_pool(self, client_ids) -> dict:
+        """Concatenate a cohort's shards into one device-resident pool.
+
+        Row layout: client at position ``s`` of ``client_ids`` owns rows
+        ``[s * shard_size, (s+1) * shard_size)``.  Repeated ids get repeated
+        slots (constant pool shape per chunk beats deduplication)."""
+        shards = [self.client_shard(c) for c in np.asarray(client_ids).ravel()]
+        return {k: jax.numpy.asarray(
+                    np.concatenate([s[k] for s in shards], axis=0))
+                for k in shards[0]}
+
+
+__all__ = ["MAX_POPULATION", "StreamingClientPool"]

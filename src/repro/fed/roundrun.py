@@ -52,24 +52,10 @@ def stacked_opt_init(optimizer, trainable, n_clients: int):
         lambda x: jnp.zeros((n_clients,) + x.shape, x.dtype), base)
 
 
-def build_window_runner(session, n_sel: int, with_keys: bool):
-    """Compile the fused R-round window for one session configuration.
-
-    Returns a jitted ``runner(trainable, opt_buf, batch_idx, mask_mults,
-    stage_keys) -> (trainable, opt_buf)`` with both carried buffers donated.
-    Shapes: ``batch_idx`` (R, n_sel, K, B) int32 into the session pool;
-    ``mask_mults`` leaves (R,); ``stage_keys`` a tuple aligned with the
-    channel stack's key-consuming stages, each (R, n_sel).
-
-    The session's backbone and data pool are closed over (device-resident
-    constants of the compiled program); R is free, so the last short chunk
-    of a run compiles once more at its own length.
-    """
-    strat, stack = session.strategy, session.channel
-    cfg, n_classes = session.cfg, session.task.n_classes
-    optimizer = session.optimizer
-    backbone, pool = session.backbone, session.pool
-    transparent = stack.transparent
+def make_client_round(cfg, n_classes, optimizer, backbone):
+    """The jit-safe per-client round body shared by the fused window
+    executor and the hierarchical edge runner (``fed/hier.py``): K masked
+    local steps from a broadcast view, with 0/1 multiplier freezing."""
 
     def one_client_round(view, opt0, client_batches, mm):
         """K local steps for one client; mm: 0/1 scalar pytree (freeze)."""
@@ -90,7 +76,34 @@ def build_window_runner(session, n_sel: int, with_keys: bool):
         (tr, opt), _ = jax.lax.scan(one_step, (view, opt0), client_batches)
         return tr, opt
 
-    def one_round(carry, xs):
+    return one_client_round
+
+
+def build_window_runner(session, n_sel: int, with_keys: bool):
+    """Compile the fused R-round window for one session configuration.
+
+    Returns a jitted ``runner(trainable, opt_buf, batch_idx, mask_mults,
+    stage_keys, pool) -> (trainable, opt_buf)`` with both carried buffers
+    donated.  Shapes: ``batch_idx`` (R, n_sel, K, B) int32 into ``pool``;
+    ``mask_mults`` leaves (R,); ``stage_keys`` a tuple aligned with the
+    channel stack's key-consuming stages, each (R, n_sel).
+
+    The session's backbone is closed over (a device-resident constant of
+    the compiled program) but the data pool is a traced ARGUMENT: streaming
+    population mode re-materializes a fresh cohort pool every chunk, and a
+    baked-in pool would either recompile per chunk or silently replay stale
+    data.  R is free, so the last short chunk of a run compiles once more
+    at its own length.
+    """
+    strat, stack = session.strategy, session.channel
+    cfg, n_classes = session.cfg, session.task.n_classes
+    optimizer = session.optimizer
+    backbone = session.backbone
+    transparent = stack.transparent
+
+    one_client_round = make_client_round(cfg, n_classes, optimizer, backbone)
+
+    def one_round(pool, carry, xs):
         trainable, opt_buf = carry
         mm = xs["mask"]
         views = jax.tree.map(
@@ -112,12 +125,13 @@ def build_window_runner(session, n_sel: int, with_keys: bool):
         new_global = strat.aggregate_stacked_mults(new_tr, mm)
         return (new_global, new_opt), None
 
-    def run_window(trainable, opt_buf, batch_idx, mask_mults, stage_keys):
+    def run_window(trainable, opt_buf, batch_idx, mask_mults, stage_keys,
+                   pool):
         xs = {"batch_idx": batch_idx, "mask": mask_mults}
         if with_keys:
             xs["keys"] = stage_keys
         (trainable, opt_buf), _ = jax.lax.scan(
-            one_round, (trainable, opt_buf), xs)
+            lambda c, x: one_round(pool, c, x), (trainable, opt_buf), xs)
         return trainable, opt_buf
 
     return jax.jit(run_window, donate_argnums=(0, 1))

@@ -77,6 +77,39 @@ class ImportanceSampler(FractionSampler):
                           replace=False, p=p)
 
 
+class CohortSampler(ClientSampler):
+    """A fixed-size uniform cohort from a (possibly huge) population.
+
+    The cross-device default (``FedSession(population=P)``): each round
+    samples ``cohort_size`` client ids without replacement from
+    ``range(population)`` via Floyd's algorithm -- O(cohort) time and
+    memory, so selecting 64 of 1M clients never touches a
+    population-sized array.  The cohort/population ratio is exactly the
+    subsampling rate ``q`` the DP accountant (``fed/privacy.py``)
+    amplifies over."""
+
+    name = "cohort"
+
+    def __init__(self, cohort_size: int):
+        if cohort_size < 1:
+            raise ValueError(f"cohort_size must be >= 1, got {cohort_size}")
+        self.cohort_size = int(cohort_size)
+
+    def select(self, round_idx, n_clients, rng):
+        del round_idx
+        k = min(self.cohort_size, n_clients)
+        # Floyd's uniform-subset sampling: k draws, no permutation of the
+        # whole population
+        chosen: set[int] = set()
+        out = []
+        for j in range(n_clients - k, n_clients):
+            t = int(rng.integers(0, j + 1))
+            pick = t if t not in chosen else j
+            chosen.add(pick)
+            out.append(pick)
+        return np.asarray(out)[rng.permutation(k)]
+
+
 def get_sampler(spec) -> ClientSampler:
     """None -> full participation; a float -> FractionSampler; or an
     instance."""

@@ -87,10 +87,18 @@ def run_federated_mode(args) -> float:
             concurrency=args.concurrency or None,
             straggler=args.straggler,
             straggler_param=args.straggler_param))
+    elif backend == "hier":
+        from repro.fed.hier import HierBackend, HierarchicalTopology
+        backend = HierBackend(HierarchicalTopology(n_edges=args.edges))
+    population = args.population if args.population > 0 else None
+    # population mode defaults to a fixed --clients cohort per round; a
+    # --client-fraction of 1.0 keeps that default (CohortSampler)
+    sampler = (None if population is not None and args.client_fraction >= 1.0
+               else args.client_fraction)
     res = FedSession(cfg, task, backend=backend,
-                     sampler=args.client_fraction, n_clients=args.clients,
+                     sampler=sampler, n_clients=args.clients,
                      n_rounds=args.rounds, local_steps=args.local_steps,
-                     lr=args.lr, seed=args.seed,
+                     lr=args.lr, seed=args.seed, population=population,
                      eval_every=args.eval_every).run()
     print(f"[fed] method={args.method} backend={args.fed_backend} "
           f"best_acc={res.best_acc:.3f} "
@@ -99,6 +107,9 @@ def run_federated_mode(args) -> float:
     if res.buffer_flushes is not None:
         print(f"[fed] async: {res.buffer_flushes} buffer flushes, "
               f"staleness_hist={res.staleness_hist}")
+    if res.dp_eps is not None:
+        print(f"[fed] privacy spent: eps={res.dp_eps:.3f} "
+              f"delta={res.dp_delta:g} (RDP accountant)")
     return res.best_acc
 
 
@@ -118,8 +129,14 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--fed-backend",
-                    choices=["loop", "sharded", "scan", "async"],
+                    choices=["loop", "sharded", "scan", "async", "hier"],
                     default="loop")
+    ap.add_argument("--population", type=int, default=0,
+                    help="cross-device: total client population; --clients "
+                         "becomes the per-round cohort drawn from it "
+                         "(0 = cross-silo, materialized clients)")
+    ap.add_argument("--edges", type=int, default=2,
+                    help="hier backend: number of edge aggregators")
     ap.add_argument("--eval-every", type=int, default=1,
                     help="evaluate every E rounds (0 = final round only); "
                          "also the scan backend's max fused-window length "

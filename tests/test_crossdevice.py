@@ -1,0 +1,347 @@
+"""Cross-device scale subsystem (DESIGN.md §12): streaming client pool
+determinism and O(cohort) memory, two-tier hierarchical aggregation
+(degenerate parity with flat FedAvg, per-tier CommLog additivity),
+subsampled-Gaussian RDP accounting (monotonicity, q=1 reduction, FedResult
+reporting), accountant-calibrated noise_multiplier, the CohortSampler, and
+the interpret-mode guard on committed benchmark trajectories."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import PEFTConfig
+from repro.configs.paper_models import TINY_ENCODER
+from repro.data.synthetic import ClassificationTask
+from repro.fed import dp as dp_lib
+from repro.fed.api import FedSession, LocalDP
+from repro.fed.channel import DPGaussianChannel, Int8DeltaChannel
+from repro.fed.hier import HierBackend, HierarchicalTopology
+from repro.fed.pool import StreamingClientPool
+from repro.fed.privacy import (DPAccountant, calibrate_sigma, epsilon_spent,
+                               rdp_gaussian, rdp_subsampled_gaussian)
+from repro.fed.samplers import CohortSampler
+
+from _hypothesis_shim import given, settings, st
+
+TASK = ClassificationTask(n_classes=2, vocab=256, seq_len=16, seed=0,
+                          signal=0.5)
+SMALL = dict(n_clients=3, n_rounds=2, local_steps=2, batch_size=8,
+             train_per_client=32, eval_n=32, lr=1e-2, seed=0)
+
+
+def _cfg(method="fedtt", **kw):
+    return dataclasses.replace(TINY_ENCODER,
+                               peft=PEFTConfig(method=method, **kw))
+
+
+def _assert_trees_close(a, b, **tol):
+    tol.setdefault("rtol", 2e-4)
+    tol.setdefault("atol", 1e-4)
+    for (pa, la), lb in zip(jax.tree_util.tree_leaves_with_path(a),
+                            jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                   err_msg=str(pa), **tol)
+
+
+# ---------------------------------------------------------------------------
+# streaming client pool
+
+
+def test_streaming_shard_deterministic_across_cohorts():
+    """Acceptance: a client's shard is a pure function of (population_seed,
+    client_id) -- identical across pool instances, cohort compositions, and
+    repeat visits (cache evicted in between)."""
+    p1 = StreamingClientPool(TASK, population=1000, shard_size=8, seed=3)
+    p2 = StreamingClientPool(TASK, population=1000, shard_size=8, seed=3,
+                             cache_clients=1)
+    s_a = p1.client_shard(417)
+    # different cohort order / different instance / cache-evicted revisit
+    p2.client_shard(999)
+    p2.client_shard(5)
+    s_b = p2.client_shard(417)
+    for k in s_a:
+        np.testing.assert_array_equal(s_a[k], s_b[k])
+    # a different population seed is a different dataset
+    s_c = StreamingClientPool(TASK, population=1000, shard_size=8,
+                              seed=4).client_shard(417)
+    assert any(not np.array_equal(s_a[k], s_c[k]) for k in s_a)
+
+
+def test_cohort_pool_layout_and_duplicates():
+    pool = StreamingClientPool(TASK, population=100, shard_size=4, seed=0)
+    cp = pool.cohort_pool([7, 3, 7])
+    assert all(np.asarray(v).shape[0] == 3 * 4 for v in cp.values())
+    s7 = pool.client_shard(7)
+    for k in cp:
+        arr = np.asarray(cp[k])
+        np.testing.assert_array_equal(arr[0:4], s7[k])     # slot 0
+        np.testing.assert_array_equal(arr[8:12], s7[k])    # duplicate slot 2
+
+
+def test_population_pool_is_cohort_sized_not_population_sized():
+    """The device pool a population run materializes is O(chunk x cohort x
+    shard) -- the population never appears in any array shape."""
+    sess = FedSession(_cfg(), TASK, backend="loop", population=10_000,
+                      n_clients=2, n_rounds=1, local_steps=1, batch_size=4,
+                      train_per_client=8, eval_n=16, seed=0, eval_every=0)
+    sess.run()
+    rows = jax.tree.leaves(sess.pool)[0].shape[0]
+    assert rows == 2 * 8          # one chunk: 1 round x 2 clients x 8
+    assert sess.stream_pool.generated <= 2
+
+
+def test_population_requires_cohort_leq_population():
+    with pytest.raises(ValueError, match="population"):
+        FedSession(_cfg(), TASK, population=2, **SMALL)
+
+
+def test_population_rejects_async_backend():
+    with pytest.raises(ValueError, match="async"):
+        FedSession(_cfg(), TASK, backend="async", population=100, **SMALL)
+
+
+def test_population_loop_vs_scan_parity():
+    """The streamed cohort pool feeds the python loop and the fused scan
+    window identically (pool-as-traced-argument); the slightly widened
+    tolerance absorbs the loop-vs-vmap float summation reorder over 3
+    rounds."""
+    kw = dict(population=200, n_clients=4, n_rounds=3, local_steps=1,
+              batch_size=4, train_per_client=16, eval_n=32, lr=1e-2,
+              seed=0, eval_every=0)
+    r_loop = FedSession(_cfg(), TASK, backend="loop", **kw).run()
+    r_scan = FedSession(_cfg(), TASK, backend="scan", **kw).run()
+    _assert_trees_close(r_loop.trainable, r_scan.trainable,
+                        rtol=1e-3, atol=5e-4)
+    np.testing.assert_allclose(r_loop.comm.uplink_kb_per_round,
+                               r_scan.comm.uplink_kb_per_round)
+
+
+# ---------------------------------------------------------------------------
+# cohort sampler
+
+
+def test_cohort_sampler_uniform_subset():
+    s = CohortSampler(16)
+    rng = np.random.default_rng(0)
+    sel = s.select(0, 1_000_000, rng)
+    assert sel.shape == (16,)
+    assert len(set(sel.tolist())) == 16           # no replacement
+    assert sel.min() >= 0 and sel.max() < 1_000_000
+    # deterministic under the same rng state; cohort capped by population
+    sel2 = CohortSampler(16).select(0, 1_000_000, np.random.default_rng(0))
+    np.testing.assert_array_equal(sel, sel2)
+    assert len(CohortSampler(16).select(0, 5, rng)) == 5
+    with pytest.raises(ValueError):
+        CohortSampler(0)
+
+
+# ---------------------------------------------------------------------------
+# hierarchical aggregation
+
+
+@pytest.mark.parametrize("channel", ["fp32", "int8"])
+def test_hier_degenerate_matches_flat_fedavg(channel):
+    """Acceptance: one edge + inherited edge channel + identity server hop
+    IS flat FedAvg -- leaf-for-leaf vs the loop backend, with the identical
+    headline per-round uplink KB and matching edge-tier per-stage figures."""
+    chan = [Int8DeltaChannel()] if channel == "int8" else None
+    r_flat = FedSession(_cfg(), TASK, backend="loop", channel=chan,
+                        **SMALL).run()
+    r_hier = FedSession(_cfg(), TASK, channel=chan,
+                        backend=HierBackend(HierarchicalTopology(n_edges=1)),
+                        **SMALL).run()
+    _assert_trees_close(r_flat.trainable, r_hier.trainable)
+    np.testing.assert_allclose(r_flat.comm.uplink_kb_per_round,
+                               r_hier.comm.uplink_kb_per_round)
+    # the edge hop re-reports the flat stack's per-stage figures under the
+    # edge_uplink/ prefix
+    for name, kbs in r_flat.comm.stage_kb.items():
+        np.testing.assert_allclose(kbs,
+                                   r_hier.comm.stage_kb[f"edge_uplink/{name}"])
+
+
+def test_hier_multi_edge_close_to_flat():
+    """Splitting the cohort across 3 edges reorders the float summation but
+    aggregates the same masked mean -- close to the flat result."""
+    r_flat = FedSession(_cfg(), TASK, backend="loop", n_clients=6,
+                        n_rounds=2, local_steps=1, batch_size=4,
+                        train_per_client=16, eval_n=32, lr=1e-2,
+                        seed=0).run()
+    r_hier = FedSession(_cfg(), TASK,
+                        backend=HierBackend(HierarchicalTopology(n_edges=3)),
+                        n_clients=6, n_rounds=2, local_steps=1, batch_size=4,
+                        train_per_client=16, eval_n=32, lr=1e-2,
+                        seed=0).run()
+    _assert_trees_close(r_flat.trainable, r_hier.trainable,
+                        rtol=1e-3, atol=1e-3)
+
+
+def test_hier_per_tier_ledger_additivity():
+    """stage_kb splits the round's total wire: edge_uplink x n_clients
+    (every client's client->edge hop) + server_uplink x n_edges (every
+    edge's edge->server hop) must equal the independently computed totals
+    of each hop's channel stack."""
+    n_clients, n_edges = 5, 2
+    topo = HierarchicalTopology(n_edges=n_edges,
+                                edge_channel=[Int8DeltaChannel()])
+    sess = FedSession(_cfg(), TASK, backend=HierBackend(topo),
+                      n_clients=n_clients, n_rounds=1, local_steps=1,
+                      batch_size=4, train_per_client=16, eval_n=32,
+                      seed=0)
+    res = sess.run()
+    edge_kb = res.comm.stage_kb["edge_uplink"][0]
+    server_kb = res.comm.stage_kb["server_uplink"][0]
+    assert res.comm.uplink_kb_per_round[0] == edge_kb
+    mask = sess.strategy.mask(res.trainable, 0)
+    edge_wire, _ = topo.edge_channel.account(res.trainable, mask)
+    server_wire, _ = topo.server_channel.account(res.trainable, mask)
+    total = edge_kb * n_clients + server_kb * n_edges
+    np.testing.assert_allclose(
+        total, (edge_wire / 1024) * n_clients + (server_wire / 1024) * n_edges)
+    # int8 edge hop is ~4x cheaper per link than the fp32 server hop
+    assert edge_kb < server_kb
+
+
+def test_hier_rejects_unstackable_and_validates_topology():
+    from repro.fed.strategies import HeteroRankStrategy
+    with pytest.raises(ValueError, match="n_edges"):
+        HierarchicalTopology(n_edges=0)
+    scfg = _cfg("fedtt", tt_rank=5)
+    sess = FedSession(scfg, TASK,
+                      strategy=HeteroRankStrategy(scfg, ranks=(2, 3, 5)),
+                      backend=HierBackend(HierarchicalTopology(n_edges=2)),
+                      **SMALL)
+    with pytest.raises(ValueError, match="loop"):
+        sess.run()
+
+
+def test_hier_population_runs_end_to_end():
+    res = FedSession(_cfg(), TASK,
+                     backend=HierBackend(HierarchicalTopology(n_edges=3)),
+                     population=500, n_clients=6, n_rounds=2, local_steps=1,
+                     batch_size=4, train_per_client=16, eval_n=32,
+                     lr=1e-2, seed=0).run()
+    assert 0.0 <= res.best_acc <= 1.0
+    assert "server_uplink" in res.comm.stage_kb
+
+
+# ---------------------------------------------------------------------------
+# RDP accountant
+
+
+def test_accountant_q1_matches_plain_gaussian_composition():
+    """q=1 (no subsampling) reduces to the Gaussian mechanism: the optimal
+    order's composed bound, exactly alpha/(2 sigma^2) per round."""
+    acct = DPAccountant(sigma=2.0, q=1.0, delta=1e-5).step(10)
+    expected = min(10 * rdp_gaussian(2.0, a) + np.log(1e5) / (a - 1)
+                   for a in acct.orders)
+    assert acct.epsilon() == pytest.approx(expected)
+    assert rdp_subsampled_gaussian(1.0, 2.0, 8) == rdp_gaussian(2.0, 8)
+    assert rdp_subsampled_gaussian(0.0, 2.0, 8) == 0.0
+
+
+def test_accountant_monotonicity_plain():
+    """Plain twin of the property test: eps grows with q and rounds,
+    shrinks with sigma; subsampling amplifies (q<1 strictly tighter)."""
+    base = epsilon_spent(1.5, 0.05, 200)
+    assert epsilon_spent(1.5, 0.10, 200) > base          # more sampling
+    assert epsilon_spent(1.5, 0.05, 400) > base          # more rounds
+    assert epsilon_spent(3.0, 0.05, 200) < base          # more noise
+    assert base < epsilon_spent(1.5, 1.0, 200)           # amplification
+    assert DPAccountant(1.5, 0.05).epsilon() == 0.0      # nothing spent yet
+    with pytest.raises(ValueError):
+        DPAccountant(1.5, 0.05).step(-1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(q=st.floats(0.001, 0.5), sigma=st.floats(0.8, 8.0),
+       rounds=st.integers(1, 500))
+def test_accountant_monotonicity_property(q, sigma, rounds):
+    """eps is monotone increasing in q and rounds, decreasing in sigma --
+    across the whole practical (q, sigma, T) regime."""
+    eps = epsilon_spent(sigma, q, rounds)
+    assert eps > 0.0
+    assert epsilon_spent(sigma, min(1.0, q * 1.5), rounds) >= eps
+    assert epsilon_spent(sigma, q, rounds + 50) >= eps
+    assert epsilon_spent(sigma * 1.5, q, rounds) <= eps
+
+
+def test_calibrate_sigma_hits_target():
+    for eps in (0.5, 2.0, 8.0):
+        sigma = calibrate_sigma(eps, 1e-5, 0.1, 100)
+        spent = epsilon_spent(sigma, 0.1, 100)
+        assert spent <= eps                      # never overspends
+        assert spent >= eps * 0.95               # and is nearly tight
+
+
+# ---------------------------------------------------------------------------
+# calibrated noise_multiplier
+
+
+def test_noise_multiplier_calibrated_beats_closed_form():
+    """The accountant-calibrated sigma is never more noise than Prop. 1's
+    closed form, the escape hatch reproduces the closed form exactly, and
+    calibrated sigma keeps the eps monotonicity the old test pinned."""
+    import math
+    for (eps, q, t) in [(1.0, 0.1, 100), (4.0, 0.25, 400), (0.5, 0.05, 50)]:
+        legacy = dp_lib.noise_multiplier(eps, 1e-5, q, t, calibrated=False)
+        assert legacy == pytest.approx(
+            2.0 * q * math.sqrt(t * math.log(1e5)) / eps)
+        calibrated = dp_lib.noise_multiplier(eps, 1e-5, q, t)
+        assert calibrated <= legacy
+        # the calibrated sigma actually meets the target it was asked for
+        assert epsilon_spent(calibrated, q, t) <= eps
+    assert (dp_lib.noise_multiplier(1.0, 1e-5, 0.1, 100)
+            > dp_lib.noise_multiplier(6.0, 1e-5, 0.1, 100))
+
+
+# ---------------------------------------------------------------------------
+# FedResult privacy reporting
+
+
+def test_fedresult_reports_local_dp_spend():
+    res = FedSession(_cfg(), TASK, backend="loop",
+                     local_dp=LocalDP(eps=4.0, delta=1e-5),
+                     n_clients=2, n_rounds=2, local_steps=1, batch_size=4,
+                     train_per_client=16, eval_n=16, seed=0).run()
+    assert res.dp_delta == 1e-5
+    # sigma was calibrated for the whole run, so the accountant-measured
+    # spend lands at (or under) the requested budget
+    assert 0.0 < res.dp_eps <= 4.0 + 1e-6
+
+
+def test_fedresult_population_amplifies_channel_dp():
+    """Same cohort + same channel noise, 10x the population -> strictly
+    smaller reported eps (amplification by subsampling, the number the
+    accountant exists to produce).  Non-DP runs report None."""
+    def run(population):
+        return FedSession(
+            _cfg(), TASK, backend="loop",
+            channel=[DPGaussianChannel(clip=1.0, sigma=2.0)],
+            population=population, n_clients=4, n_rounds=2, local_steps=1,
+            batch_size=4, train_per_client=16, eval_n=16, seed=0).run()
+
+    small, large = run(100), run(1000)
+    assert large.dp_eps < small.dp_eps
+    res = FedSession(_cfg(), TASK, backend="loop", n_clients=2, n_rounds=1,
+                     local_steps=1, batch_size=4, train_per_client=16,
+                     eval_n=16, seed=0).run()
+    assert res.dp_eps is None and res.dp_delta is None
+
+
+# ---------------------------------------------------------------------------
+# interpret-mode guard on committed trajectories
+
+
+def test_write_bench_json_refuses_interpret_on_committed_path(tmp_path):
+    from benchmarks.common import write_bench_json
+    payload = {"meta": {"pallas_interpret": True}, "results": []}
+    with pytest.raises(ValueError, match="interpret"):
+        write_bench_json(str(tmp_path / "BENCH_kernel.json"), payload)
+    # smoke paths and non-interpret payloads stay writable
+    write_bench_json(str(tmp_path / "BENCH_kernel.smoke.json"), payload)
+    write_bench_json(str(tmp_path / "BENCH_kernel.json"),
+                     {"meta": {"pallas_interpret": False}, "results": []})
+    assert (tmp_path / "BENCH_kernel.json").exists()
