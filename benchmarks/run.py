@@ -12,10 +12,10 @@ import argparse
 import sys
 import time
 
-from benchmarks import (bench_comm_cost, bench_crossdevice, bench_dp,
-                        bench_extensions, bench_glue_fedtt,
+from benchmarks import (bench_async, bench_comm_cost, bench_crossdevice,
+                        bench_dp, bench_extensions, bench_glue_fedtt,
                         bench_heterogeneity, bench_kernel, bench_rank_sweep,
-                        bench_roofline)
+                        bench_roofline, bench_round, bench_serve)
 
 SUITES = {
     "comm_cost": bench_comm_cost.run,        # Tables 5, 6, 14, 15
@@ -27,6 +27,9 @@ SUITES = {
     "roofline": bench_roofline.run,          # §Roofline (reads dry-run JSON)
     "extensions": bench_extensions.run,      # beyond-paper: hetero-rank + int8
     "crossdevice": bench_crossdevice.run,    # DESIGN.md §12 population sweep
+    "round": bench_round.run,                # backend round-throughput
+    "serve": bench_serve.run,                # multi-tenant adapter serving
+    "async": bench_async.run,                # FedBuff vs sync executors
 }
 
 

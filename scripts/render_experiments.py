@@ -134,7 +134,7 @@ def async_table(path="BENCH_async.json"):
     for (sev, ch), group in sorted(
             by.items(), key=lambda kv: (sev_order.get(kv[0][0], 9), kv[0][1])):
         scan_sim = group.get("scan", {}).get("sim_s_per_round")
-        for b in ("scan", "async"):
+        for b in ("scan", "async", "async_fused"):
             if b not in group:
                 continue
             r = group[b]
@@ -149,11 +149,16 @@ def async_table(path="BENCH_async.json"):
     lines += ["", "Simulated-clock speedup of the FedBuff buffer over the "
               "sync barrier (acceptance: >= 2x under `heavy`):", ""]
     for s in data.get("summary", []):
+        fused = ""
+        if "speedup_exec_fused_vs_async" in s:
+            fused = (f"; fused scan executes "
+                     f"{s['speedup_exec_fused_vs_async']:.1f}x faster than "
+                     f"the host event loop")
         lines.append(f"- {s['severity']} / {s['channel']}: "
                      f"{s['speedup_sim_async_vs_scan']:.2f}x "
                      f"(async python event loop costs "
                      f"+{s['exec_overhead_ms_async_vs_scan']:.0f} ms/round "
-                     f"of real executor time)")
+                     f"of real executor time{fused})")
     return "\n".join(lines)
 
 

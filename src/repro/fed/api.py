@@ -15,7 +15,9 @@ One entry point, four orthogonal pluggable pieces:
     scan-over-rounds window executor (``"scan"``, ``fed/roundrun.py``), or
     the staleness-aware async FedBuff executor (``"async"``,
     ``fed/async_exec.py`` -- configure via
-    ``backend=AsyncBackend(AsyncConfig(...))``).
+    ``backend=AsyncBackend(AsyncConfig(...))``) and its device-fused twin
+    (``"async_fused"``, ``fed/async_fused.py`` -- one ``lax.scan`` over the
+    precomputed arrival schedule, same semantics leaf-for-leaf).
 
 Typical use::
 
@@ -140,11 +142,11 @@ class FedSession:
                 raise ValueError(
                     f"population={self.population} smaller than the cohort "
                     f"(n_clients={n_clients})")
-            if self.backend.name == "async":
+            if self.backend.name in ("async", "async_fused"):
                 raise ValueError(
-                    "backend='async' simulates materialized per-client "
-                    "speeds and is incompatible with population= streaming; "
-                    "use loop/scan/hier")
+                    f"backend={self.backend.name!r} simulates materialized "
+                    "per-client speeds and is incompatible with population= "
+                    "streaming; use loop/scan/hier")
             # cross-device default: a fixed cohort of n_clients drawn
             # uniformly from the population each round (O(cohort) sampling)
             if sampler is None:

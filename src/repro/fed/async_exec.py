@@ -36,6 +36,16 @@ drains in-flight clients and flushes any partial buffer so the evaluated
 state reflects all dispatched work.  Run with ``eval_every=0`` for one
 barrier-free window over the whole session (the benchmark configuration;
 see DESIGN.md §11).
+
+The virtual clock is deterministic in ``(seed, speed_seed)`` and never
+looks at training results, so the entire dispatch/arrival/flush simulation
+factors out of the executor: :func:`plan_schedule` runs the event loop
+WITHOUT training and emits an :class:`EventSchedule` -- one row per
+arrival, in arrival order, carrying the client id, batch rows, start
+version, staleness at flush, and flush boundaries.  ``AsyncBackend``
+consumes the schedule on the host (training each event lazily at its start
+version); :class:`~repro.fed.async_fused.FusedAsyncBackend` compiles the
+same schedule into ONE ``lax.scan`` over events (DESIGN.md §13).
 """
 
 from __future__ import annotations
@@ -112,24 +122,129 @@ def client_speeds(n_clients: int, config: AsyncConfig, seed: int) -> np.ndarray:
                    f"registered: {STRAGGLER_DISTS}")
 
 
-@dataclasses.dataclass
-class _Job:
-    """One in-flight client: trained at dispatch, buffered at arrival."""
-    client: int
-    plan_round: int      # the plan the job came from (DP-SGD key stream)
-    start_version: int   # server version the client downloaded
-    delta: dict          # trained - start view (pre-channel)
-    mask: dict           # strategy mask at the START version
+@dataclasses.dataclass(frozen=True)
+class EventSchedule:
+    """The precomputed arrival schedule of one executor window.
+
+    One row per arrival, sorted in ARRIVAL order -- which is also the order
+    the channel key stream is consumed in, on both the host and the fused
+    path.  All fields are plain numpy (host data): the schedule is what the
+    fused executor feeds to its ``lax.scan`` as per-event xs."""
+    client: np.ndarray         # (E,) client ids
+    plan_round: np.ndarray     # (E,) absolute plan round (DP-SGD key stream)
+    batch_rows: np.ndarray     # (E, K, B) rows into the session data pool
+    start_version: np.ndarray  # (E,) absolute server version at dispatch
+    #: server versions elapsed between dispatch and the flush that
+    #: aggregates the event: ``flush_version - start_version``
+    staleness: np.ndarray      # (E,)
+    #: 0/1: a server flush fires right after this arrival is buffered (the
+    #: last event of a non-empty window always flushes -- the chunk drain)
+    flush_after: np.ndarray    # (E,)
+    #: ordinal (0-based, within the window) of the flush aggregating each
+    #: event; ``flush_of[i] == flush_after[:i].sum()``
+    flush_of: np.ndarray       # (E,)
+    n_flushes: int
+    sim_time: float            # virtual clock after the window
+    seq_end: int               # dispatch-seq counter after the window
 
 
-@dataclasses.dataclass
-class _Buffered:
-    """One arrived up-link awaiting the next flush."""
-    delta: dict          # as decoded by the server (post-channel)
-    mask: dict
-    start_version: int
-    wire: float          # bytes on the wire (channel accounting)
-    per_stage: dict
+def _window_counts(plans, config: AsyncConfig) -> tuple[int, int]:
+    """Resolve the buffer_size/concurrency 'selection size' defaults for a
+    window, rejecting ragged selections that make the default ambiguous."""
+    n_sel = len(plans[0].selected)
+    if (not config.buffer_size or not config.concurrency) and any(
+            len(p.selected) != n_sel for p in plans):
+        raise ValueError(
+            "per-round selection sizes vary across this window; the "
+            "'selection size' defaults for buffer_size/concurrency are "
+            "ambiguous -- set them explicitly in AsyncConfig")
+    buffer_size = config.buffer_size if config.buffer_size else n_sel
+    concurrency = config.concurrency if config.concurrency else n_sel
+    return buffer_size, concurrency
+
+
+def plan_schedule(plans, speeds: np.ndarray, config: AsyncConfig, *,
+                  start_round: int = 0, clock0: float = 0.0,
+                  version0: int = 0, seq0: int = 0) -> EventSchedule:
+    """Run the FedBuff virtual clock WITHOUT training.
+
+    Pure in its inputs: the dispatch/arrival/flush sequence depends only on
+    the plans' client ids and batch-row counts, the per-client ``speeds``
+    (see :func:`client_speeds`), and the config -- never on training
+    results.  Simultaneous finishers tie-break by dispatch sequence, and a
+    whole arrival timestamp is processed before replacements dispatch,
+    exactly like the host event loop this was factored out of.  ``clock0``
+    / ``version0`` / ``seq0`` carry the executor state across chunk
+    boundaries (chunks drain, so no job spans two schedules)."""
+    if not plans:
+        raise ValueError(
+            "empty plans window: the async executor needs at least one "
+            "RoundPlan to schedule (check n_rounds / the chunking loop)")
+    buffer_size, concurrency = _window_counts(plans, config)
+
+    queue = deque()
+    for i, plan in enumerate(plans):
+        for pos, ci in enumerate(plan.selected):
+            queue.append((int(ci), plan.batch_idx[pos], start_round + i))
+
+    clock, version, seq = clock0, version0, seq0
+    in_flight: list = []       # heap of (finish_time, seq, record)
+    events: list = []          # [client, plan_round, rows, start_version]
+    flush_after: list[int] = []
+    buffered = 0
+    while queue or in_flight:
+        # dispatch replacements AFTER a whole arrival timestamp is
+        # processed, so simultaneous finishers never hand a stale snapshot
+        # to the next wave (degenerate case: plan r+1's clients all start
+        # at version r+1)
+        while queue and len(in_flight) < concurrency:
+            client, rows, plan_round = queue.popleft()
+            dur = float(speeds[client]) * len(rows)
+            # the DISPATCH version rides with the job: a mid-batch flush
+            # between dispatch and arrival must not retarget its snapshot
+            heapq.heappush(
+                in_flight,
+                (clock + dur, seq, (client, plan_round, rows, version)))
+            seq += 1
+        if not in_flight:
+            break
+        # pop every arrival sharing the earliest finish time (ties are
+        # deterministic: dispatch order)
+        t0 = in_flight[0][0]
+        arrivals = []
+        while in_flight and in_flight[0][0] == t0:
+            arrivals.append(heapq.heappop(in_flight)[2])
+        clock = t0
+        for event in arrivals:
+            events.append(event)
+            flush_after.append(0)
+            buffered += 1
+            if buffered >= buffer_size:
+                flush_after[-1] = 1
+                version += 1
+                buffered = 0
+    if buffered:
+        # chunk-boundary drain: a partial buffer still flushes so the
+        # evaluated state reflects every dispatched client
+        flush_after[-1] = 1
+        version += 1
+
+    flush_after_arr = np.asarray(flush_after, np.int64)
+    flush_of = np.concatenate([[0], np.cumsum(flush_after_arr)[:-1]]) \
+        if events else np.zeros(0, np.int64)
+    start_version = np.asarray([e[3] for e in events], np.int64)
+    return EventSchedule(
+        client=np.asarray([e[0] for e in events], np.int64),
+        plan_round=np.asarray([e[1] for e in events], np.int64),
+        batch_rows=(np.stack([np.asarray(e[2]) for e in events])
+                    if events else np.zeros((0, 0, 0), np.int64)),
+        start_version=start_version,
+        staleness=(version0 + flush_of) - start_version,
+        flush_after=flush_after_arr,
+        flush_of=flush_of,
+        n_flushes=version - version0,
+        sim_time=clock,
+        seq_end=seq)
 
 
 class AsyncBackend(Backend):
@@ -214,110 +329,117 @@ class AsyncBackend(Backend):
                                           round_idx)
         return tr, kbs[0], stages[0]
 
-    # ------------------------------------------------------------------
-    def run_rounds(self, session, global_trainable, plans, start_round,
-                   eval_hook=None):
+    def _begin_window(self, session, plans, start_round) -> EventSchedule:
+        """Shared window prologue (host and fused paths): validate, reset
+        at round 0, draw speeds, and plan the event schedule from the
+        executor's persistent (clock, version, seq) state."""
         reason = self.incompatible_reason(session)
         if reason is not None:
             raise ValueError(reason)
+        if not plans:
+            raise ValueError(
+                "empty plans window: the async executor needs at least one "
+                "RoundPlan to schedule (check n_rounds / the chunking loop)")
         if start_round == 0:
             self._reset()
         if self._speeds is None:
             self._speeds = client_speeds(session.n_clients, self.config,
                                          session.seed)
+        return plan_schedule(plans, self._speeds, self.config,
+                             start_round=start_round, clock0=self._clock,
+                             version0=self._version, seq0=self._seq)
+
+    def _commit_window(self, schedule: EventSchedule) -> None:
+        """Advance the persistent simulator state past an executed window
+        and fold its staleness values into the run statistics."""
+        for s in schedule.staleness:
+            self.staleness_hist[int(s)] = self.staleness_hist.get(int(s),
+                                                                  0) + 1
+        self.buffer_flushes += schedule.n_flushes
+        self._version += schedule.n_flushes
+        self._clock = schedule.sim_time
+        self._seq = schedule.seq_end
+        self.sim_time = self._clock
+
+    def _window_ledger(self, session, schedule: EventSchedule, template,
+                       masks: list):
+        """Per-flush CommLog figures from shape-only accounting (zero
+        device syncs; the fused path's ledger).  One entry per flush: the
+        mean wire KB / per-stage KB over its buffered events -- exactly
+        what the sequential ``ChannelStack.uplink`` path records, since
+        wire bytes depend only on (shapes, mask)."""
+        stack = session.channel
+        kbs, stage_list = [], []
+        wires: list = []
+        stage_acc: dict = {}
+        for e in range(len(schedule.client)):
+            wire, per_stage = stack.account(template, masks[e])
+            wires.append(wire)
+            for name, b in per_stage.items():
+                stage_acc.setdefault(name, []).append(b / 1024)
+            if schedule.flush_after[e]:
+                kbs.append(float(np.mean(wires)) / 1024)
+                stage_list.append({n: float(np.mean(v))
+                                   for n, v in stage_acc.items()})
+                wires, stage_acc = [], {}
+        return kbs, stage_list
+
+    # ------------------------------------------------------------------
+    def run_rounds(self, session, global_trainable, plans, start_round,
+                   eval_hook=None):
+        sched = self._begin_window(session, plans, start_round)
         cfg = self.config
         strat, stack = session.strategy, session.channel
         optimizer = session.optimizer
+        version0 = self._version
 
-        # FIFO job source: each plan contributes its selected clients with
-        # their precomputed (K, B) batch rows, in plan order
-        queue = deque()
-        for i, plan in enumerate(plans):
-            for pos, ci in enumerate(plan.selected):
-                queue.append((int(ci), plan.batch_idx[pos], start_round + i))
-        n_sel = len(plans[0].selected)
-        if (not cfg.buffer_size or not cfg.concurrency) and any(
-                len(p.selected) != n_sel for p in plans):
-            raise ValueError(
-                "per-round selection sizes vary across this window; the "
-                "'selection size' defaults for buffer_size/concurrency are "
-                "ambiguous -- set them explicitly in AsyncConfig")
-        buffer_size = cfg.buffer_size if cfg.buffer_size else n_sel
-        concurrency = cfg.concurrency if cfg.concurrency else n_sel
-
-        trainable = global_trainable
-        in_flight: list = []        # heap of (finish_time, seq, _Job)
-        buffer: list[_Buffered] = []
+        #: server state per version created this window (refs, not copies:
+        #: a client dispatched at version v trains from versions[v - v0])
+        versions = [global_trainable]
+        buffer: list = []          # (delta, mask, wire, per_stage)
+        buf_stale: list[int] = []
         kbs, stage_list = [], []
+        for e in range(len(sched.client)):
+            client = int(sched.client[e])
+            sv = int(sched.start_version[e])
+            base = versions[sv - version0]
+            view, ccfg = strat.client_view(base, client)
+            is_global = view is base
+            mask_c = strat.mask(view, sv)
+            opt_state = (session.opt_template(view) if is_global
+                         else optimizer.init(view))
+            trained = run_client_steps(
+                session, view, opt_state, mask_c,
+                ccfg if ccfg is not None else session.cfg,
+                sched.batch_rows[e], int(sched.plan_round[e]), client)
+            # the channel runs at ARRIVAL, in arrival order: stateful
+            # stages (DP noise) consume their key stream exactly as a
+            # real out-of-order up-link would
+            delta, wire, per_stage = stack.uplink(_tree_sub(trained, view),
+                                                  mask_c)
+            buffer.append((delta, mask_c, wire, per_stage))
+            buf_stale.append(int(sched.staleness[e]))
+            if sched.flush_after[e]:
+                weights = [staleness_weight(s, cfg.alpha) for s in buf_stale]
+                versions.append(apply_weighted_deltas(
+                    versions[-1], [b[0] for b in buffer],
+                    [b[1] for b in buffer], weights,
+                    server_lr=cfg.server_lr))
+                kbs.append(float(np.mean([b[2] for b in buffer])) / 1024)
+                acc: dict = {}
+                for b in buffer:
+                    for name, byts in b[3].items():
+                        acc.setdefault(name, []).append(byts / 1024)
+                stage_list.append({n: float(np.mean(v))
+                                   for n, v in acc.items()})
+                buffer, buf_stale = [], []
 
-        def flush():
-            nonlocal trainable
-            stale = [self._version - e.start_version for e in buffer]
-            weights = [staleness_weight(s, cfg.alpha) for s in stale]
-            for s in stale:
-                self.staleness_hist[s] = self.staleness_hist.get(s, 0) + 1
-            trainable = apply_weighted_deltas(
-                trainable, [e.delta for e in buffer],
-                [e.mask for e in buffer], weights, server_lr=cfg.server_lr)
-            self._version += 1
-            self.buffer_flushes += 1
-            kbs.append(float(np.mean([e.wire for e in buffer])) / 1024)
-            acc: dict = {}
-            for e in buffer:
-                for name, b in e.per_stage.items():
-                    acc.setdefault(name, []).append(b / 1024)
-            stage_list.append({n: float(np.mean(v)) for n, v in acc.items()})
-            buffer.clear()
-
-        while queue or in_flight:
-            # dispatch replacements AFTER a whole arrival timestamp is
-            # processed, so simultaneous finishers never hand a stale
-            # snapshot to the next wave (degenerate case: plan r+1's
-            # clients all start at version r+1)
-            while queue and len(in_flight) < concurrency:
-                client, rows, plan_round = queue.popleft()
-                view, ccfg = strat.client_view(trainable, client)
-                is_global = view is trainable
-                mask_c = strat.mask(view, self._version)
-                opt_state = (session.opt_template(view) if is_global
-                             else optimizer.init(view))
-                trained = run_client_steps(
-                    session, view, opt_state, mask_c,
-                    ccfg if ccfg is not None else session.cfg,
-                    rows, plan_round, client)
-                job = _Job(client, plan_round, self._version,
-                           _tree_sub(trained, view), mask_c)
-                dur = float(self._speeds[client]) * len(rows)
-                heapq.heappush(in_flight, (self._clock + dur, self._seq, job))
-                self._seq += 1
-            if not in_flight:
-                break
-            # pop every arrival sharing the earliest finish time (ties are
-            # deterministic: dispatch order)
-            t0 = in_flight[0][0]
-            arrivals = []
-            while in_flight and in_flight[0][0] == t0:
-                arrivals.append(heapq.heappop(in_flight)[2])
-            self._clock = t0
-            for job in arrivals:
-                # the channel runs at ARRIVAL, in arrival order: stateful
-                # stages (DP noise) consume their key stream exactly as a
-                # real out-of-order up-link would
-                delta, wire, per_stage = stack.uplink(job.delta, job.mask)
-                buffer.append(_Buffered(delta, job.mask, job.start_version,
-                                        wire, per_stage))
-                if len(buffer) >= buffer_size:
-                    flush()
-
-        if buffer:
-            # chunk-boundary drain: a partial buffer still flushes so the
-            # evaluated state reflects every dispatched client
-            flush()
-        self.sim_time = self._clock
+        self._commit_window(sched)
+        trainable = versions[-1]
         if eval_hook is not None:
             eval_hook(trainable, start_round + len(plans) - 1)
         return trainable, kbs, stage_list
 
 
-__all__ = ["AsyncBackend", "AsyncConfig", "STRAGGLER_DISTS", "client_speeds",
-           "staleness_weight"]
+__all__ = ["AsyncBackend", "AsyncConfig", "EventSchedule", "STRAGGLER_DISTS",
+           "client_speeds", "plan_schedule", "staleness_weight"]

@@ -1,0 +1,159 @@
+"""Device-fused FedBuff executor: one ``lax.scan`` over the arrival schedule.
+
+:class:`~repro.fed.async_exec.AsyncBackend` already factors its virtual
+clock into a pure planner (:func:`~repro.fed.async_exec.plan_schedule`) --
+the dispatch/arrival/flush sequence is deterministic in ``(seed,
+speed_seed)`` and never looks at training results.  This module compiles
+the *other* half: :class:`FusedAsyncBackend` executes a whole window's
+:class:`~repro.fed.async_exec.EventSchedule` as ONE jitted, donated-buffer
+``lax.scan`` over arrival events (``roundrun.build_event_runner``), where
+the host backend runs a python loop with one dispatch per local step.
+
+What makes FedBuff scannable (DESIGN.md §13):
+
+* **Versioned starts become a snapshot bank.**  A client dispatched at
+  server version ``v`` trains from that version even if flushes land
+  before its arrival.  The host keeps a python list of version refs; the
+  scan carries ``snaps`` -- a ``(n_flushes + 1, ...)`` buffer per leaf --
+  and gathers each event's view with ``lax.dynamic_index_in_dim`` at its
+  (host-precomputed) relative start version.
+* **Staleness weights become data.**  The flush rule
+  (:func:`~repro.fed.strategies.apply_weighted_deltas`: per-leaf
+  normalization over contributing clients) depends only on the schedule's
+  masks / staleness / flush grouping, all known before execution --
+  :func:`~repro.fed.strategies.weighted_delta_mults` precomputes per-event
+  per-leaf multipliers so the scan just accumulates ``mult * delta`` and
+  folds the accumulator into the server state at 0/1 flush boundaries
+  (branch-free: non-flush events add ``0 * acc`` and rewrite the current
+  snapshot row with itself).
+* **The key stream is reserved in arrival order.**
+  :meth:`~repro.fed.channel.ChannelStack.event_keys` pre-splits one key
+  per arrival, so stateful channel stages (DP noise) draw exactly the
+  sequence the host path's sequential up-links would.
+
+Comm accounting reuses the stack's static (shape-only) path per event --
+the fused window costs zero device syncs for its ledger, and matches the
+host figures exactly because wire bytes depend only on (shapes, mask).
+
+``tests/test_fed_async_fused.py`` pins fused == host leaf-for-leaf (fp
+tolerance; CommLog/staleness stats exact) across strategies, channels,
+straggler regimes, and buffer sizes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.fed.async_exec import AsyncBackend, AsyncConfig, staleness_weight
+from repro.fed.roundrun import build_event_runner, stack_mask_mults
+from repro.fed.strategies import Strategy, weighted_delta_mults
+
+
+class FusedAsyncBackend(AsyncBackend):
+    """FedBuff semantics at scan speed (see module docstring).
+
+    Subclasses :class:`AsyncBackend` for the planner, the persistent
+    simulator state (clock / version / dispatch seq / staleness stats),
+    validation, and the host event loop -- which doubles as the fallback
+    for configurations the fused program cannot express
+    (:meth:`fallback_reason`)."""
+
+    name = "async_fused"
+
+    def __init__(self, config: AsyncConfig | None = None):
+        super().__init__(config)
+        self._runner = None
+        self._runner_sig = None
+        #: the session the cached runner was compiled for (held strongly so
+        #: its id can never be recycled by a different session object)
+        self._runner_session = None
+
+    def fallback_reason(self, session) -> str | None:
+        """Why this session runs the host event loop instead of the fused
+        scan (None when it can fuse).  Unlike :meth:`incompatible_reason`
+        these are not errors -- the host path handles them."""
+        if session.local_dp is not None:
+            return "per-step DP-SGD is host-path-only"
+        if not session.channel.transparent and not session.channel.device_safe:
+            return ("channel stack has a stage overriding transform() "
+                    "without transform_device()")
+        if type(session.strategy).client_view is not Strategy.client_view:
+            return (f"strategy {session.strategy.name!r} customizes "
+                    "client_view(); the fused scan gathers every client's "
+                    "start state from the version snapshot bank")
+        return None
+
+    # ------------------------------------------------------------------
+    def run_rounds(self, session, global_trainable, plans, start_round,
+                   eval_hook=None):
+        if self.fallback_reason(session) is not None:
+            return super().run_rounds(session, global_trainable, plans,
+                                      start_round, eval_hook)
+        sched = self._begin_window(session, plans, start_round)
+        n_events = len(sched.client)
+        if n_events == 0:
+            # plans selected no clients: nothing dispatched, nothing flushed
+            self._commit_window(sched)
+            if eval_hook is not None:
+                eval_hook(global_trainable, start_round + len(plans) - 1)
+            return global_trainable, [], []
+        cfg = self.config
+        strat, stack = session.strategy, session.channel
+        version0 = self._version
+
+        # per-event masks at the START version (FedBuff: the mask rides
+        # with the dispatch, not the flush); one strat.mask per distinct
+        # version, reused across its events
+        mask_cache: dict = {}
+        masks = []
+        for sv in sched.start_version:
+            sv = int(sv)
+            if sv not in mask_cache:
+                mask_cache[sv] = strat.mask(global_trainable, sv)
+            masks.append(mask_cache[sv])
+        mask_mults = stack_mask_mults(masks)              # leaves (E,)
+        weights = [staleness_weight(int(s), cfg.alpha)
+                   for s in sched.staleness]
+        weight_mults = weighted_delta_mults(masks, weights, sched.flush_of)
+        with_keys = bool(stack.key_stages)
+        stage_keys = stack.event_keys(n_events) if with_keys else ()
+
+        # ledger before execution: static accounting, zero device syncs
+        kbs, stage_list = self._window_ledger(session, sched,
+                                              global_trainable, masks)
+
+        if (self._runner is None or self._runner_sig != with_keys
+                or self._runner_session is not session):
+            self._runner = build_event_runner(session, with_keys,
+                                              cfg.server_lr)
+            self._runner_sig = with_keys
+            self._runner_session = session
+
+        n_flushes = sched.n_flushes
+        # version snapshot bank: row 0 = the entry state, one row per
+        # flush; rows are written before any event reads them (an event's
+        # start version always predates its arrival)
+        snaps = jax.tree.map(
+            lambda x: jnp.concatenate(
+                [x[None], jnp.zeros((n_flushes,) + x.shape, x.dtype)]),
+            global_trainable)
+        acc = jax.tree.map(jnp.zeros_like, global_trainable)
+        opt_buf = session.opt_template(global_trainable)
+
+        trainable = self._runner(
+            global_trainable, snaps, acc, opt_buf,
+            jnp.asarray(sched.batch_rows, jnp.int32),
+            jnp.asarray(sched.start_version - version0, jnp.int32),
+            mask_mults, weight_mults,
+            jnp.asarray(sched.flush_after, jnp.int32),
+            stage_keys, session.pool)
+
+        self._commit_window(sched)
+        if eval_hook is not None:
+            eval_hook(trainable, start_round + len(plans) - 1)
+        return trainable, kbs, stage_list
+
+
+__all__ = ["FusedAsyncBackend"]

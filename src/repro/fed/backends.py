@@ -21,6 +21,10 @@ floating-point tolerance on the aggregated trainable pytree:
     the only NON-synchronous executor -- a virtual-clock FedBuff simulator
     where up-links arrive out of order and the server flushes a staleness-
     discounted buffer instead of waiting on a round barrier.
+  * ``FusedAsyncBackend`` (``fed/async_fused.py``, registered as
+    ``"async_fused"``): the same FedBuff semantics executed as ONE jitted
+    ``lax.scan`` over the precomputed arrival schedule -- pinned
+    leaf-for-leaf against the host simulator.
   * ``HierBackend`` (``fed/hier.py``, registered as ``"hier"``): two-tier
     cross-device aggregation -- E edge aggregators each FedAvg their cohort
     slice on-device, the server merges the edge summaries, and every hop
@@ -363,6 +367,12 @@ def _async_backend():
     return AsyncBackend()
 
 
+def _async_fused_backend():
+    # local import: fed/async_fused.py imports Backend transitively
+    from repro.fed.async_fused import FusedAsyncBackend
+    return FusedAsyncBackend()
+
+
 def _hier_backend():
     # local import: fed/hier.py imports Backend from this module
     from repro.fed.hier import HierBackend
@@ -371,7 +381,7 @@ def _hier_backend():
 
 _BACKENDS = {"loop": LoopBackend, "sharded": ShardedBackend,
              "scan": ScanBackend, "async": _async_backend,
-             "hier": _hier_backend}
+             "async_fused": _async_fused_backend, "hier": _hier_backend}
 
 
 def get_backend(spec) -> Backend:

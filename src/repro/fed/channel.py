@@ -321,6 +321,15 @@ class ChannelStack:
                 delta = s.transform_device(delta, mask)
         return delta
 
+    def event_keys(self, n_events: int) -> tuple:
+        """Per-stage key arrays, each (n_events,), for a fused ASYNC window
+        -- one key per arrival, reserved in arrival order, so the fused
+        executor's key stream is identical to ``n_events`` sequential
+        ``transform()`` calls on the host path (the ordering contract of
+        DESIGN.md §13)."""
+        return tuple(s.device_keys(n_events) for s in self.stages
+                     if s.needs_key)
+
     def window_keys(self, n_rounds: int, n_clients: int) -> tuple:
         """Per-stage key arrays, each (n_rounds, n_clients), for a fused
         window -- advancing every stateful stage's counter exactly as

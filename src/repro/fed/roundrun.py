@@ -79,6 +79,90 @@ def make_client_round(cfg, n_classes, optimizer, backbone):
     return one_client_round
 
 
+def build_event_runner(session, with_keys: bool, server_lr: float):
+    """Compile the fused ASYNC executor for one session configuration
+    (DESIGN.md §13): one jitted ``lax.scan`` over the arrival events of a
+    precomputed :class:`~repro.fed.async_exec.EventSchedule`.
+
+    Returns ``runner(cur, snaps, acc, opt_buf, batch_idx, rel_start,
+    mask_mults, weight_mults, flush, stage_keys, pool) -> trainable`` with
+    the carried server state donated (the other carries never become
+    outputs, so donating them would buy nothing and XLA would warn).
+    Shapes, per event ``e`` of ``E``:
+
+    * ``snaps`` -- (V+1, ...) per leaf: the server state at each version
+      the window creates (``snaps[0]`` = the entry state, one row per
+      flush).  Events gather their client view at ``rel_start[e]`` --
+      FedBuff's versioned starts as a dynamic index instead of a python
+      snapshot list;
+    * ``mask_mults`` -- (E,) 0/1 per leaf: the strategy mask at the START
+      version, as data (``strategies.stack_mask_mults``);
+    * ``weight_mults`` -- (E,) per leaf: per-leaf normalized staleness
+      weights (``strategies.weighted_delta_mults``) -- the whole flush
+      normalization precomputed on the host;
+    * ``flush`` -- (E,) 0/1: flush boundaries.  On a flush the carried
+      ``acc`` folds into the server state, zeroes, and the new version is
+      written to ``snaps`` at the advanced version cursor; non-flush
+      events rewrite the current row with itself (branch-free no-op).
+
+    The per-event client round is the same ``make_client_round`` body the
+    sync scan executor vmaps; the channel runs ``uplink_device`` per event
+    with ``stage_keys`` pre-split in arrival order (each (E,)), so DP key
+    streams match the host path exactly."""
+    strat, stack = session.strategy, session.channel
+    cfg, n_classes = session.cfg, session.task.n_classes
+    optimizer = session.optimizer
+    backbone = session.backbone
+    transparent = stack.transparent
+    del strat   # aggregation is the precomputed weight_mults, not a method
+
+    one_client_round = make_client_round(cfg, n_classes, optimizer, backbone)
+
+    def one_event(pool, carry, xs):
+        cur, snaps, acc, opt_buf, relv = carry
+        view = jax.tree.map(
+            lambda s: jax.lax.dynamic_index_in_dim(s, xs["start"], 0,
+                                                   keepdims=False), snaps)
+        # one client trains per event: zero the donated opt buffer in place
+        opt0 = jax.tree.map(jnp.zeros_like, opt_buf)
+        batches = jax.tree.map(lambda x: x[xs["batch_idx"]], pool)
+        mm = xs["mask"]
+        trained, new_opt = one_client_round(view, opt0, batches, mm)
+        delta = jax.tree.map(lambda a, b: a - b, trained, view)
+        if not transparent:
+            keys = xs["keys"] if with_keys else ()
+            delta = stack.uplink_device(delta, mm, keys)
+        acc = jax.tree.map(
+            lambda a, d, w: a + jnp.asarray(w, d.dtype) * d,
+            acc, delta, xs["wmult"])
+        f = xs["flush"]                       # 0/1 int32 flush boundary
+        new_cur = jax.tree.map(
+            lambda c, a: (c + jnp.asarray(f, c.dtype) * server_lr
+                          * a).astype(c.dtype), cur, acc)
+        acc = jax.tree.map(lambda a: a * jnp.asarray(1 - f, a.dtype), acc)
+        new_relv = relv + f
+        # flush: write the new version at the advanced cursor; otherwise
+        # rewrite the current row with itself (snaps[relv] == cur invariant)
+        snaps = jax.tree.map(
+            lambda s, c: jax.lax.dynamic_update_index_in_dim(s, c, new_relv,
+                                                             0),
+            snaps, new_cur)
+        return (new_cur, snaps, acc, new_opt, new_relv), None
+
+    def run_events(cur, snaps, acc, opt_buf, batch_idx, rel_start,
+                   mask_mults, weight_mults, flush, stage_keys, pool):
+        xs = {"batch_idx": batch_idx, "start": rel_start, "mask": mask_mults,
+              "wmult": weight_mults, "flush": flush}
+        if with_keys:
+            xs["keys"] = stage_keys
+        (cur, _, _, _, _), _ = jax.lax.scan(
+            lambda c, x: one_event(pool, c, x),
+            (cur, snaps, acc, opt_buf, jnp.int32(0)), xs)
+        return cur
+
+    return jax.jit(run_events, donate_argnums=(0,))
+
+
 def build_window_runner(session, n_sel: int, with_keys: bool):
     """Compile the fused R-round window for one session configuration.
 

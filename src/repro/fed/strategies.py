@@ -128,6 +128,39 @@ def apply_weighted_deltas(trainable: dict, deltas: list, masks: list,
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def weighted_delta_mults(masks: list, weights: list, flush_of) -> dict:
+    """Host-side precomputation of the fused async flush: turn
+    :func:`apply_weighted_deltas`'s per-leaf normalization into per-event
+    multiplier DATA (the same trick ``aggregate_stacked_mults`` plays with
+    per-round masks).
+
+    ``masks[e]`` / ``weights[e]`` describe arrival event ``e`` and
+    ``flush_of[e]`` says which buffer flush aggregates it.  Returns a
+    pytree shaped like ``masks[0]`` whose leaves are (E,) f32 arrays
+    ``mult[e] = w_e * m_e / sum_{e' in same flush} w_e' * m_e'`` (0 when no
+    buffered client communicated the leaf) -- so a scan accumulating
+    ``acc += mult[e] * delta[e]`` and applying ``server += server_lr * acc``
+    at each flush boundary reproduces the host flush rule flush-for-flush."""
+    if not (len(masks) == len(weights) == len(flush_of)):
+        raise ValueError("masks/weights/flush_of length mismatch")
+    treedef = jax.tree_util.tree_structure(masks[0])
+    flat_m = np.asarray([[bool(x) for x in jax.tree.leaves(m)]
+                         for m in masks])                  # (E, n_leaves)
+    w = np.asarray(weights, np.float64)[:, None]           # (E, 1)
+    groups = np.asarray(flush_of)
+    contrib = w * flat_m                                   # (E, n_leaves)
+    out = np.zeros_like(contrib)
+    for g in np.unique(groups):
+        sel = groups == g
+        tot = contrib[sel].sum(axis=0)                     # (n_leaves,)
+        out[sel] = np.divide(contrib[sel], tot,
+                             out=np.zeros_like(contrib[sel]),
+                             where=tot > 0.0)
+    cols = [np.asarray(out[:, li], np.float32)
+            for li in range(flat_m.shape[1])]
+    return jax.tree_util.tree_unflatten(treedef, cols)
+
+
 def mask_multipliers(mask: dict):
     """Bool mask pytree -> f32 0./1. scalar pytree (scan-executor form)."""
     return jax.tree.map(lambda m: np.float32(bool(m)), mask)

@@ -79,14 +79,20 @@ def run_federated_mode(args) -> float:
     cfg = dataclasses.replace(TINY_ENCODER, peft=PEFTConfig(method=args.method))
     task = ClassificationTask(n_classes=2, vocab=256, seq_len=16, seed=args.seed)
     backend = args.fed_backend
-    if backend == "async":
-        from repro.fed.async_exec import AsyncBackend, AsyncConfig
-        backend = AsyncBackend(AsyncConfig(
+    if backend in ("async", "async_fused"):
+        from repro.fed.async_exec import AsyncConfig
+        acfg = AsyncConfig(
             buffer_size=args.buffer_size or None,
             alpha=args.staleness_alpha,
             concurrency=args.concurrency or None,
             straggler=args.straggler,
-            straggler_param=args.straggler_param))
+            straggler_param=args.straggler_param)
+        if backend == "async":
+            from repro.fed.async_exec import AsyncBackend
+            backend = AsyncBackend(acfg)
+        else:
+            from repro.fed.async_fused import FusedAsyncBackend
+            backend = FusedAsyncBackend(acfg)
     elif backend == "hier":
         from repro.fed.hier import HierBackend, HierarchicalTopology
         backend = HierBackend(HierarchicalTopology(n_edges=args.edges))
@@ -129,7 +135,8 @@ def main(argv=None):
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--local-steps", type=int, default=2)
     ap.add_argument("--fed-backend",
-                    choices=["loop", "sharded", "scan", "async", "hier"],
+                    choices=["loop", "sharded", "scan", "async",
+                             "async_fused", "hier"],
                     default="loop")
     ap.add_argument("--population", type=int, default=0,
                     help="cross-device: total client population; --clients "

@@ -1,0 +1,58 @@
+"""Benchmark registry drift guard.
+
+``bench_crossdevice`` shipped with ``--smoke`` support but was missing from
+``benchmarks/run.py`` and the CI ``bench-smoke`` job until a later PR
+noticed.  These tests make the recurrence structural: every
+``benchmarks/bench_*.py`` that exposes ``--smoke`` must be (a) registered
+in the harness ``SUITES`` table and (b) exercised by the CI smoke job.
+"""
+
+import pathlib
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(REPO))
+
+from benchmarks import run as bench_run  # noqa: E402
+
+
+def _smoke_benches() -> list[str]:
+    """Module stems of every benchmark exposing a --smoke CLI flag."""
+    out = []
+    for path in sorted((REPO / "benchmarks").glob("bench_*.py")):
+        if "--smoke" in path.read_text():
+            out.append(path.stem)
+    assert out, "no --smoke benchmarks found: glob or layout changed?"
+    return out
+
+
+def test_every_smoke_bench_registered_in_harness():
+    registered = {fn.__module__.rsplit(".", 1)[-1]
+                  for fn in bench_run.SUITES.values()}
+    missing = [b for b in _smoke_benches() if b not in registered]
+    assert not missing, (
+        f"benchmarks with --smoke missing from benchmarks/run.py SUITES: "
+        f"{missing}")
+
+
+def test_every_smoke_bench_exercised_by_ci():
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    missing = [b for b in _smoke_benches()
+               if f"benchmarks/{b}.py --smoke" not in ci]
+    assert not missing, (
+        f"benchmarks with --smoke not run by the CI bench-smoke job: "
+        f"{missing}")
+
+
+def test_smoke_benches_upload_their_artifacts():
+    """Each smoke bench writes BENCH_<suite>.smoke.json; the CI job must
+    upload it or the artifact silently vanishes from run summaries."""
+    ci = (REPO / ".github" / "workflows" / "ci.yml").read_text()
+    missing = [b for b in _smoke_benches()
+               if f"BENCH_{b.removeprefix('bench_')}.smoke.json" not in ci]
+    assert not missing, f"smoke artifacts not uploaded by CI: {missing}"
+
+
+def test_registered_suites_are_callable():
+    for name, fn in bench_run.SUITES.items():
+        assert callable(fn), f"suite {name!r} is not callable"

@@ -1,0 +1,366 @@
+"""Fused async executor (fed/async_fused.py) parity + planner properties.
+
+The load-bearing contracts:
+
+  * **Leaf-for-leaf parity** -- :class:`FusedAsyncBackend` (one ``lax.scan``
+    over the precomputed arrival schedule) must be indistinguishable from
+    the host :class:`AsyncBackend` event loop across {fedtt, fedtt_plus} x
+    {fp32, int8} x {homogeneous, lognormal stragglers} x {full, partial
+    buffer}: trainables to fp tolerance, per-flush ``CommLog`` figures,
+    ``staleness_hist``, ``buffer_flushes``, and ``sim_time`` EXACTLY.
+  * **Transitive degenerate chain** -- fused-async == host-async ==
+    ``LoopBackend`` in the sync-equivalent configuration (homogeneous
+    speeds, full buffer, ``alpha=0``).
+  * **Planner properties** (hypothesis via tests/_hypothesis_shim.py, with
+    plain spot-check twins) -- :func:`plan_schedule` matches an independent
+    reference simulation of the FedBuff virtual clock: arrival order,
+    simultaneous-finish tie-breaking by dispatch seq, flush boundaries,
+    staleness values, and chunk-boundary drains.
+  * **Guard rails** -- both backends reject an empty plans window with a
+    clear message instead of the pre-fix bare ``IndexError``.
+"""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.configs.base import PEFTConfig
+from repro.configs.paper_models import TINY_ENCODER
+from repro.data.synthetic import ClassificationTask
+from repro.fed.api import FedSession
+from repro.fed.async_exec import (AsyncBackend, AsyncConfig, client_speeds,
+                                  plan_schedule, staleness_weight)
+from repro.fed.async_fused import FusedAsyncBackend
+from repro.fed.backends import RoundPlan
+from repro.fed.channel import Int8DeltaChannel
+
+TASK = ClassificationTask(n_classes=2, vocab=256, seq_len=16, seed=0,
+                          signal=0.5)
+
+SMALL = dict(n_clients=3, n_rounds=2, local_steps=2, batch_size=8,
+             train_per_client=32, eval_n=32, lr=1e-2, seed=0)
+
+
+def _cfg(method, **kw):
+    return dataclasses.replace(TINY_ENCODER,
+                               peft=PEFTConfig(method=method, **kw))
+
+
+def _channel(name):
+    return [Int8DeltaChannel()] if name == "int8" else None
+
+
+def _async_cfg(straggler, buffer):
+    return AsyncConfig(
+        buffer_size=2 if buffer == "partial" else None,
+        alpha=0.5,
+        straggler=straggler,
+        straggler_param=0.75 if straggler == "lognormal" else 1.0)
+
+
+def _assert_leaves_close(a_tree, b_tree, rtol, atol):
+    for a, b in zip(jax.tree.leaves(a_tree), jax.tree.leaves(b_tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=rtol, atol=atol)
+
+
+# ---------------------------------------------------------------------------
+# Acceptance: fused == host leaf-for-leaf on every parity configuration
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("buffer", ["full", "partial"])
+@pytest.mark.parametrize("straggler", ["homogeneous", "lognormal"])
+@pytest.mark.parametrize("channel", ["fp32", "int8"])
+@pytest.mark.parametrize("method", ["fedtt", "fedtt_plus"])
+def test_fused_matches_host_async(method, channel, straggler, buffer):
+    cfg = _cfg(method)
+    runs = {}
+    for name, be in (("host", AsyncBackend(_async_cfg(straggler, buffer))),
+                     ("fused", FusedAsyncBackend(_async_cfg(straggler,
+                                                            buffer)))):
+        sess = FedSession(cfg, TASK, backend=be, channel=_channel(channel),
+                          eval_every=0, **SMALL)
+        if name == "fused":
+            # sanity: this configuration really exercises the scan path
+            assert be.fallback_reason(sess) is None
+        runs[name] = (sess.run(), be)
+    res_h, be_h = runs["host"]
+    res_f, be_f = runs["fused"]
+    # int8 re-quantizes round 2's deltas, so a ULP-level divergence after
+    # round 1 can flip one rounding decision (one scale step); fp32 paths
+    # track to the usual backend-parity tolerance
+    if channel == "int8":
+        _assert_leaves_close(res_h.trainable, res_f.trainable,
+                             rtol=2e-3, atol=5e-3)
+    else:
+        _assert_leaves_close(res_h.trainable, res_f.trainable,
+                             rtol=2e-4, atol=1e-4)
+    # the simulator statistics and the per-flush ledger are EXACT: both
+    # paths execute the identical EventSchedule and shape-only accounting
+    assert be_f.staleness_hist == be_h.staleness_hist
+    assert be_f.buffer_flushes == be_h.buffer_flushes
+    assert be_f.sim_time == be_h.sim_time
+    assert res_f.comm.uplink_kb_per_round == res_h.comm.uplink_kb_per_round
+    assert res_f.comm.stage_kb == res_h.comm.stage_kb
+    assert res_f.buffer_flushes == res_h.buffer_flushes
+    assert res_f.staleness_hist == res_h.staleness_hist
+
+
+def test_transitive_degenerate_chain_fused_host_loop():
+    """Homogeneous speeds + full buffer + alpha=0 collapse FedBuff to sync
+    FedAvg: fused-async == host-async == LoopBackend leaf-for-leaf."""
+    cfg = _cfg("fedtt_plus")
+    degenerate = lambda: AsyncConfig(alpha=0.0, straggler="homogeneous")
+    res_loop = FedSession(cfg, TASK, backend="loop", **SMALL).run()
+    res_host = FedSession(cfg, TASK, backend=AsyncBackend(degenerate()),
+                          **SMALL).run()
+    res_fused = FedSession(cfg, TASK, backend=FusedAsyncBackend(degenerate()),
+                           eval_every=0, **SMALL).run()
+    _assert_leaves_close(res_fused.trainable, res_host.trainable,
+                         rtol=2e-4, atol=1e-4)
+    _assert_leaves_close(res_fused.trainable, res_loop.trainable,
+                         rtol=2e-4, atol=1e-4)
+    np.testing.assert_allclose(res_fused.comm.uplink_kb_per_round,
+                               res_loop.comm.uplink_kb_per_round)
+    assert res_fused.buffer_flushes == SMALL["n_rounds"]
+    assert res_fused.staleness_hist == {
+        0: SMALL["n_rounds"] * SMALL["n_clients"]}
+
+
+def test_fused_registry_and_cli_entry_points():
+    res = FedSession(_cfg("fedtt"), TASK, backend="async_fused", n_clients=2,
+                     n_rounds=1, local_steps=1, batch_size=8,
+                     train_per_client=16, eval_n=16, lr=1e-2).run()
+    assert np.isfinite(res.acc_history).all()
+    assert res.comm.total_kb > 0
+    assert res.buffer_flushes >= 1
+    from repro.launch.train import main
+    assert main(["--mode", "federated", "--fed-backend", "async_fused",
+                 "--clients", "2", "--rounds", "1", "--local-steps", "1",
+                 "--straggler", "lognormal", "--straggler-param", "0.5",
+                 "--seed", "0"]) >= 0.0
+
+
+def test_fused_falls_back_for_dp_sgd():
+    """Per-step DP-SGD cannot fuse; the backend must delegate to the host
+    event loop (and agree with it bit-for-bit, being the same code)."""
+    from repro.fed.api import LocalDP
+    kw = dict(SMALL, local_dp=LocalDP(eps=8.0, delta=1e-5, clip=1.0))
+    runs = []
+    for be in (AsyncBackend(_async_cfg("lognormal", "partial")),
+               FusedAsyncBackend(_async_cfg("lognormal", "partial"))):
+        sess = FedSession(_cfg("fedtt"), TASK, backend=be, **kw)
+        assert (be.fallback_reason(sess) is not None
+                if isinstance(be, FusedAsyncBackend) else True)
+        runs.append(sess.run())
+    for a, b in zip(jax.tree.leaves(runs[0].trainable),
+                    jax.tree.leaves(runs[1].trainable)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Guard: empty plans windows fail loudly (pre-fix: bare IndexError)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend_cls", [AsyncBackend, FusedAsyncBackend])
+def test_empty_plans_window_raises_value_error(backend_cls):
+    be = backend_cls(AsyncConfig())
+    sess = FedSession(_cfg("fedtt"), TASK, backend=be, **SMALL)
+    _, trainable, _ = sess._setup()
+    with pytest.raises(ValueError, match="empty plans"):
+        be.run_rounds(sess, trainable, [], 0)
+
+
+def test_plan_schedule_empty_plans_raises():
+    with pytest.raises(ValueError, match="empty plans"):
+        plan_schedule([], np.ones(3), AsyncConfig())
+
+
+# ---------------------------------------------------------------------------
+# Planner properties: plan_schedule vs an independent reference simulation
+# ---------------------------------------------------------------------------
+
+def _make_plans(n_rounds, selections, k_steps):
+    """RoundPlans with synthetic batch indices ((n_sel, K, B) int32)."""
+    plans = []
+    for sel in selections[:n_rounds]:
+        sel = np.asarray(sel, np.int64)
+        plans.append(RoundPlan(
+            selected=sel,
+            batch_idx=np.zeros((len(sel), k_steps, 2), np.int32)))
+    return plans
+
+
+def _reference_sim(plans, speeds, buffer_size, concurrency):
+    """Deliberately independent FedBuff clock: no heap, no deque -- plain
+    lists, minimum-scan arrival selection, explicit dispatch bookkeeping."""
+    todo = []
+    for i, p in enumerate(plans):
+        for pos, c in enumerate(p.selected):
+            todo.append({"client": int(c), "k": len(p.batch_idx[pos]),
+                         "round": i})
+    clock, version, seq = 0.0, 0, 0
+    running, events = [], []
+    buffered = 0
+    while todo or running:
+        while todo and len(running) < concurrency:
+            job = todo.pop(0)
+            running.append(dict(job, seq=seq, sv=version,
+                                finish=clock + float(speeds[job["client"]])
+                                * job["k"]))
+            seq += 1
+        if not running:
+            break
+        t = min(r["finish"] for r in running)
+        arriving = sorted([r for r in running if r["finish"] == t],
+                          key=lambda r: r["seq"])
+        running = [r for r in running if r["finish"] != t]
+        clock = t
+        for r in arriving:
+            events.append({"client": r["client"], "round": r["round"],
+                           "sv": r["sv"], "flush": 0})
+            buffered += 1
+            if buffered >= buffer_size:
+                events[-1]["flush"] = 1
+                version += 1
+                buffered = 0
+    if buffered:
+        events[-1]["flush"] = 1
+        version += 1
+    # staleness at flush: versions elapsed between dispatch and the flush
+    # aggregating the event
+    n_flush_before = 0
+    for e in events:
+        e["stale"] = n_flush_before - e["sv"]
+        e["flush_of"] = n_flush_before
+        n_flush_before += e["flush"]
+    return events, version, clock, seq
+
+
+def _check_schedule_against_reference(n_clients, n_rounds, selections,
+                                      k_steps, buffer_size, concurrency,
+                                      straggler, param, seed):
+    config = AsyncConfig(buffer_size=buffer_size, concurrency=concurrency,
+                         straggler=straggler, straggler_param=param)
+    speeds = client_speeds(n_clients, config, seed)
+    plans = _make_plans(n_rounds, selections, k_steps)
+    n_sel = len(plans[0].selected)
+    ref_events, ref_version, ref_clock, ref_seq = _reference_sim(
+        plans, speeds, buffer_size or n_sel, concurrency or n_sel)
+    sched = plan_schedule(plans, speeds, config)
+    assert list(sched.client) == [e["client"] for e in ref_events]
+    assert list(sched.plan_round) == [e["round"] for e in ref_events]
+    assert list(sched.start_version) == [e["sv"] for e in ref_events]
+    assert list(sched.staleness) == [e["stale"] for e in ref_events]
+    assert list(sched.flush_after) == [e["flush"] for e in ref_events]
+    assert list(sched.flush_of) == [e["flush_of"] for e in ref_events]
+    assert sched.n_flushes == ref_version
+    assert sched.sim_time == ref_clock
+    assert sched.seq_end == ref_seq
+    # structural invariants
+    if len(ref_events):
+        assert sched.flush_after[-1] == 1       # chunk-boundary drain
+    assert (sched.staleness >= 0).all()
+    assert sched.n_flushes == int(sched.flush_after.sum())
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=40, deadline=None)
+    @given(st.integers(2, 6), st.integers(1, 4), st.integers(1, 3),
+           st.integers(0, 4), st.integers(0, 3),
+           st.sampled_from(["homogeneous", "uniform", "lognormal", "pareto"]),
+           st.floats(0.1, 2.0), st.integers(0, 10), st.data())
+    def test_plan_schedule_matches_reference_sim(n_clients, n_rounds, k_steps,
+                                                 buffer_size, concurrency,
+                                                 straggler, param, seed,
+                                                 data):
+        n_sel = data.draw(st.integers(1, n_clients))
+        selections = [data.draw(st.lists(
+            st.integers(0, n_clients - 1), min_size=n_sel, max_size=n_sel))
+            for _ in range(n_rounds)]
+        _check_schedule_against_reference(
+            n_clients, n_rounds, selections, k_steps,
+            buffer_size or None, concurrency or None, straggler, param, seed)
+
+
+def test_plan_schedule_matches_reference_spot():
+    """Plain twin of the hypothesis property (runs even without
+    hypothesis): straggler mix, partial buffers, throttled concurrency."""
+    cases = [
+        (4, 2, 2, None, None, "homogeneous", 1.0, 0),
+        (4, 3, 1, 2, None, "homogeneous", 1.0, 0),      # mid-wave flushes
+        (5, 2, 2, 3, 2, "lognormal", 0.75, 1),          # throttled dispatch
+        (6, 3, 3, 4, 3, "pareto", 1.5, 2),
+        (3, 4, 1, 2, 1, "uniform", 0.5, 3),             # serial arrivals
+    ]
+    for n_clients, n_rounds, k, buf, conc, dist, param, seed in cases:
+        rng = np.random.default_rng(seed)
+        selections = [rng.integers(0, n_clients, size=max(2, n_clients - 1))
+                      for _ in range(n_rounds)]
+        _check_schedule_against_reference(n_clients, n_rounds, selections, k,
+                                          buf, conc, dist, param, seed)
+
+
+def test_simultaneous_finishers_tie_break_by_dispatch_seq():
+    """Homogeneous speeds make a whole wave finish at one timestamp; the
+    arrivals must land in dispatch order, and a buffer smaller than the
+    wave must flush MID-wave (later arrivals of the same instant see a
+    newer version at flush but keep their dispatch-time start version)."""
+    config = AsyncConfig(buffer_size=2, straggler="homogeneous")
+    speeds = client_speeds(4, config, 0)
+    plans = _make_plans(1, [[0, 1, 2, 3]], 2)
+    sched = plan_schedule(plans, speeds, config)
+    assert list(sched.client) == [0, 1, 2, 3]           # dispatch order
+    assert list(sched.flush_after) == [0, 1, 0, 1]
+    assert list(sched.start_version) == [0, 0, 0, 0]    # all dispatch at v0
+    assert list(sched.staleness) == [0, 0, 1, 1]        # mid-wave flush
+    assert sched.n_flushes == 2
+
+
+def test_partial_buffer_drains_at_chunk_boundary():
+    """3 arrivals with buffer_size=2: one full flush + one drain flush of
+    the single leftover."""
+    config = AsyncConfig(buffer_size=2, straggler="homogeneous")
+    speeds = client_speeds(3, config, 0)
+    sched = plan_schedule(_make_plans(1, [[0, 1, 2]], 1), speeds, config)
+    assert list(sched.flush_after) == [0, 1, 1]
+    assert sched.n_flushes == 2
+    assert list(sched.flush_of) == [0, 0, 1]
+
+
+def test_schedule_state_threading_across_chunks():
+    """clock0/version0/seq0 carry the executor state across chunk
+    boundaries: chunk 2's staleness is measured against the carried-in
+    version, and its clock starts where chunk 1 ended."""
+    config = AsyncConfig(buffer_size=2, straggler="lognormal",
+                         straggler_param=0.75)
+    speeds = client_speeds(4, config, 0)
+    plans = _make_plans(2, [[0, 1, 2, 3], [3, 2, 1, 0]], 2)
+    whole = plan_schedule(plans, speeds, config)
+    first = plan_schedule(plans[:1], speeds, config)
+    second = plan_schedule(plans[1:], speeds, config, start_round=1,
+                           clock0=first.sim_time, version0=first.n_flushes,
+                           seq0=first.seq_end)
+    # chunks drain, so the only divergence the split may introduce is the
+    # drain flush of chunk 1 (the whole window would have kept buffering);
+    # with full flushes the concatenation must reproduce the single window
+    assert first.n_flushes + second.n_flushes >= whole.n_flushes
+    # chunk 2's staleness is relative to the carried version0, never negative
+    np.testing.assert_array_equal(
+        np.asarray(second.staleness),
+        (first.n_flushes + np.asarray(second.flush_of))
+        - np.asarray(second.start_version))
+    assert (np.asarray(second.staleness) >= 0).all()
+    assert second.sim_time >= first.sim_time
+    assert second.seq_end == whole.seq_end
+    assert (second.start_version >= first.n_flushes).all()
+
+
+def test_staleness_weight_monotone():
+    ws = [staleness_weight(s, 0.5) for s in range(5)]
+    assert all(a > b for a, b in zip(ws, ws[1:]))
+    assert staleness_weight(0, 0.5) == 1.0
