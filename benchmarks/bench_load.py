@@ -1,0 +1,240 @@
+"""Serving load generator: Poisson arrivals, mixed prompt lengths, skewed
+per-tenant traffic (DESIGN.md §14).
+
+bench_serve.py measures closed-loop decode throughput (every tenant always
+has a request queued).  This benchmark drives the OPEN-loop regime a serving
+deployment actually sees: requests arrive on a Poisson process, prompts are
+mixed-length, and tenants are Zipf-skewed -- a few hot adapters take most of
+the traffic while a long tail stays cold.  It resolves the two PR-9 serving
+mechanisms:
+
+  * **chunked prefill** -- time-to-first-token (TTFT) probes pin the chunked
+    `model_prefill` path against the step-per-prompt-token piggyback oracle
+    at several prompt lengths (the acceptance gate: >= 3x lower TTFT at
+    prompt length >= 64, with token parity held by tests/test_serve_engine);
+  * **paging-aware admission** -- the same skewed workload runs under the
+    grouped `PagingScheduler` and under plain FIFO, reporting page-in
+    traffic, batched page-in writes, thrash rounds, and starvation promotions
+    alongside tokens/sec and p50/p99 latency/TTFT.
+
+Results go to ``BENCH_load.json`` (the serving-loop pillar of the perf
+trajectory); render with ``python scripts/render_experiments.py load``.
+
+    PYTHONPATH=src python benchmarks/bench_load.py [--smoke] [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+if __package__ in (None, ""):                 # `python benchmarks/bench_load.py`
+    import pathlib
+    import sys
+    sys.path.insert(0, str(pathlib.Path(__file__).resolve().parents[1]))
+
+from benchmarks.bench_serve import make_adapters
+from benchmarks.common import row, write_bench_json
+from repro.configs.base import get_config
+from repro.models.transformer import model_init
+from repro.serve import AdapterBank, PagingScheduler, Request, ServeEngine
+
+
+def make_workload(n_req: int, n_adapters: int, vocab: int, seed: int = 0,
+                  mean_interarrival: float = 0.05,
+                  prompt_lens=(8, 32, 64), zipf_s: float = 1.1,
+                  max_new: int = 16) -> list[dict]:
+    """n_req request specs: Poisson arrivals (exponential interarrivals),
+    prompt length mixed uniformly over ``prompt_lens``, tenant drawn from a
+    Zipf(s) distribution over ``n_adapters`` (rank-1 tenant hottest)."""
+    rng = np.random.default_rng(seed)
+    arrivals = np.cumsum(rng.exponential(mean_interarrival, size=n_req))
+    ranks = np.arange(1, n_adapters + 1, dtype=np.float64)
+    w = ranks ** -zipf_s
+    w /= w.sum()
+    specs = []
+    for i in range(n_req):
+        n = int(rng.choice(prompt_lens))
+        specs.append({
+            "arrival": float(arrivals[i]),
+            "prompt": [int(t) for t in rng.integers(1, vocab, size=n)],
+            "adapter": int(rng.choice(n_adapters, p=w)),
+            "max_new": max_new,
+        })
+    return specs
+
+
+def run_load(engine: ServeEngine, workload: list[dict], label: str) -> dict:
+    """Open-loop drive: submit each request when its arrival time elapses,
+    step the engine whenever it has work, and reduce the per-request serving
+    timelines (``engine.times``) to throughput + latency/TTFT percentiles."""
+    pending = sorted(workload, key=lambda s: s["arrival"])
+    uids, i = [], 0
+    t0 = time.perf_counter()
+    while i < len(pending) or engine.queue or \
+            any(s.req is not None for s in engine.slots):
+        now = time.perf_counter() - t0
+        while i < len(pending) and pending[i]["arrival"] <= now:
+            spec = pending[i]
+            uid = engine.submit(Request(list(spec["prompt"]),
+                                        max_new_tokens=spec["max_new"],
+                                        adapter=spec["adapter"]))
+            # latency clock starts at the ARRIVAL instant, not the (possibly
+            # late) submit call, so host scheduling jitter is not hidden
+            engine.times[uid]["arrival"] = t0 + spec["arrival"]
+            uids.append(uid)
+            i += 1
+        if engine.queue or any(s.req is not None for s in engine.slots):
+            engine.step()
+        else:
+            time.sleep(min(1e-3, max(0.0, pending[i]["arrival"] - now)))
+    wall = time.perf_counter() - t0
+
+    lat = np.array([engine.times[u]["done"] - engine.times[u]["arrival"]
+                    for u in uids])
+    ttft = np.array([engine.times[u]["first_token"]
+                     - engine.times[u]["arrival"] for u in uids])
+    tokens = sum(engine.times[u]["n_tokens"] for u in uids)
+    out = {
+        "kind": "load", "label": label, "requests": len(uids),
+        "tokens": tokens, "wall_s": wall,
+        "tokens_per_sec": tokens / wall,
+        "latency_p50_ms": float(np.percentile(lat, 50) * 1e3),
+        "latency_p99_ms": float(np.percentile(lat, 99) * 1e3),
+        "ttft_p50_ms": float(np.percentile(ttft, 50) * 1e3),
+        "ttft_p99_ms": float(np.percentile(ttft, 99) * 1e3),
+    }
+    if engine.bank is not None:
+        out["page_ins"] = engine.bank.page_ins
+        out["page_in_batches"] = engine.bank.page_in_batches
+    if engine.sched is not None:
+        out["thrash_rounds"] = engine.sched.stats.thrash_rounds
+        out["starvation_admits"] = engine.sched.stats.starvation_admits
+    return out
+
+
+def ttft_probe(cfg, params, prefill: str, prompt_len: int, reps: int,
+               max_len: int, prefill_chunk: int = 32) -> dict:
+    """Median single-request TTFT (submit -> first token) for one prefill
+    mode at one prompt length; a warm pass first so compile time never
+    counts."""
+    engine = ServeEngine(cfg, params, batch_slots=1, max_len=max_len,
+                         prefill=prefill, prefill_chunk=prefill_chunk)
+    prompt = [(3 * k) % (cfg.vocab - 1) + 1 for k in range(prompt_len)]
+
+    def one() -> float:
+        uid = engine.submit(Request(list(prompt), max_new_tokens=1))
+        while "first_token" not in engine.times[uid]:
+            engine.step()
+        engine.run_until_done()
+        t = engine.times[uid]
+        return t["first_token"] - t["submitted"]
+
+    one()                                        # compile + warm
+    samples = [one() for _ in range(reps)]
+    return {"kind": "ttft", "prefill": engine.prefill_mode,
+            "prompt_len": prompt_len, "reps": reps,
+            "ttft_ms": float(np.median(samples) * 1e3)}
+
+
+def summarize(results: list[dict]) -> dict:
+    ttft = {}
+    for r in results:
+        if r["kind"] == "ttft":
+            ttft.setdefault(r["prompt_len"], {})[r["prefill"]] = r["ttft_ms"]
+    speedups = {
+        n: by["piggyback"] / by["chunked"]
+        for n, by in sorted(ttft.items())
+        if "piggyback" in by and "chunked" in by}
+    loads = {r["label"]: r for r in results if r["kind"] == "load"}
+    out = {"ttft_speedup_chunked_vs_piggyback":
+           {str(n): s for n, s in speedups.items()},
+           # acceptance gate: chunked >= 3x lower TTFT at prompt len >= 64
+           "acceptance_ttft_3x_at_64": bool(
+               min((s for n, s in speedups.items() if n >= 64),
+                   default=0.0) >= 3.0)}
+    if "chunked+grouped" in loads and "chunked+fifo" in loads:
+        out["page_ins_grouped_vs_fifo"] = [
+            loads["chunked+grouped"].get("page_ins"),
+            loads["chunked+fifo"].get("page_ins")]
+    return out
+
+
+def run(smoke: bool = False, out_json: str | None = None) -> dict:
+    if out_json is None:
+        out_json = "BENCH_load.smoke.json" if smoke else "BENCH_load.json"
+    cfg = get_config("qwen3_4b", smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+
+    # --- TTFT probes: chunked vs piggyback across prompt lengths ---------
+    lens = [16, 64] if smoke else [16, 64, 128]
+    reps = 2 if smoke else 5
+    probe_max_len = max(lens) + 8
+    results = []
+    for n in lens:
+        for mode in ("piggyback", "chunked"):
+            r = ttft_probe(cfg, params, mode, n, reps, probe_max_len)
+            results.append(r)
+            row(f"load[ttft][{mode}][len={n}]", r["ttft_ms"] * 1e3,
+                f"ttft_ms={r['ttft_ms']:.2f}")
+
+    # --- open-loop load runs: Poisson + Zipf tenants ---------------------
+    n_req = 10 if smoke else 48
+    n_adapters = 3 if smoke else 8
+    slots = 2 if smoke else 4
+    max_resident = 2 if smoke else 4
+    prompt_lens = (4, 8, 16) if smoke else (8, 32, 64)
+    max_new = 4 if smoke else 16
+    max_len = max(prompt_lens) + max_new
+    mean_ia = 0.02 if smoke else 0.05
+    workload = make_workload(n_req, n_adapters, cfg.vocab, seed=0,
+                             mean_interarrival=mean_ia,
+                             prompt_lens=prompt_lens, max_new=max_new)
+    backbone = {"backbone": params["backbone"]}
+    adapters = make_adapters(cfg, n_adapters)
+
+    setups = [("piggyback", True), ("chunked", True)]
+    if not smoke:
+        setups.append(("chunked", False))
+    for prefill, grouped in setups:
+        label = f"{prefill}+{'grouped' if grouped else 'fifo'}"
+        engine = ServeEngine(
+            cfg, backbone, batch_slots=slots, max_len=max_len,
+            bank=AdapterBank(adapters, max_resident=max_resident),
+            prefill=prefill,
+            sched=PagingScheduler(group_by_adapter=grouped))
+        r = run_load(engine, workload, label)
+        results.append(r)
+        row(f"load[{label}]", 1e6 / r["tokens_per_sec"],
+            f"tokens_per_sec={r['tokens_per_sec']:.1f} "
+            f"p99_ms={r['latency_p99_ms']:.1f}")
+
+    payload = {"meta": {"backend": jax.default_backend(), "smoke": smoke,
+                        "config": cfg.name, "n_req": n_req,
+                        "n_adapters": n_adapters, "slots": slots,
+                        "max_resident": max_resident,
+                        "prompt_lens": list(prompt_lens),
+                        "max_new_tokens": max_new,
+                        "mean_interarrival_s": mean_ia,
+                        "zipf_s": 1.1, "ttft_reps": reps},
+               "results": results,
+               "summary": summarize(results)}
+    write_bench_json(out_json, payload)
+    return payload
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI (separate output path)")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    run(smoke=args.smoke, out_json=args.out)
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

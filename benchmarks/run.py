@@ -14,8 +14,9 @@ import time
 
 from benchmarks import (bench_async, bench_comm_cost, bench_crossdevice,
                         bench_dp, bench_extensions, bench_glue_fedtt,
-                        bench_heterogeneity, bench_kernel, bench_rank_sweep,
-                        bench_roofline, bench_round, bench_serve)
+                        bench_heterogeneity, bench_kernel, bench_load,
+                        bench_rank_sweep, bench_roofline, bench_round,
+                        bench_serve)
 
 SUITES = {
     "comm_cost": bench_comm_cost.run,        # Tables 5, 6, 14, 15
@@ -30,6 +31,7 @@ SUITES = {
     "round": bench_round.run,                # backend round-throughput
     "serve": bench_serve.run,                # multi-tenant adapter serving
     "async": bench_async.run,                # FedBuff vs sync executors
+    "load": bench_load.run,                  # open-loop serving load (§14)
 }
 
 

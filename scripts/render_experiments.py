@@ -192,6 +192,55 @@ def serve_table(path="BENCH_serve.json"):
     return "\n".join(lines)
 
 
+def load_table(path="BENCH_load.json"):
+    """The EXPERIMENTS.md §Perf serving-load tables: TTFT chunked vs
+    piggyback per prompt length, and the open-loop Poisson/Zipf load runs
+    (tokens/sec, p50/p99 latency + TTFT, page-in traffic)."""
+    with open(path) as f:
+        data = json.load(f)
+    meta = data["meta"]
+    ttft = {}
+    for r in data["results"]:
+        if r["kind"] == "ttft":
+            ttft.setdefault(r["prompt_len"], {})[r["prefill"]] = r["ttft_ms"]
+    lines = [f"Measured on backend=`{meta['backend']}`, "
+             f"config=`{meta['config']}`, ttft_reps={meta['ttft_reps']}.",
+             "",
+             "| prompt len | piggyback TTFT ms | chunked TTFT ms | speedup |",
+             "|---|---|---|---|"]
+    for n, by in sorted(ttft.items()):
+        sp = (f"{by['piggyback'] / by['chunked']:.1f}x"
+              if "piggyback" in by and "chunked" in by else "—")
+        lines.append(f"| {n} | {by.get('piggyback', 0):.1f} | "
+                     f"{by.get('chunked', 0):.1f} | {sp} |")
+    lines += ["",
+              f"Open-loop load: {meta['n_req']} requests, Poisson "
+              f"interarrival {meta['mean_interarrival_s']*1e3:.0f} ms, "
+              f"Zipf(s={meta['zipf_s']}) over {meta['n_adapters']} tenants "
+              f"(max_resident={meta['max_resident']}), "
+              f"prompts {meta['prompt_lens']}, "
+              f"max_new={meta['max_new_tokens']}, slots={meta['slots']}.",
+              "",
+              "| setup | tok/s | lat p50 ms | lat p99 ms | TTFT p50 ms | "
+              "TTFT p99 ms | page-ins | batched writes | thrash rounds |",
+              "|---|---|---|---|---|---|---|---|---|"]
+    for r in data["results"]:
+        if r["kind"] != "load":
+            continue
+        lines.append(
+            f"| {r['label']} | {r['tokens_per_sec']:.1f} | "
+            f"{r['latency_p50_ms']:.0f} | {r['latency_p99_ms']:.0f} | "
+            f"{r['ttft_p50_ms']:.0f} | {r['ttft_p99_ms']:.0f} | "
+            f"{r.get('page_ins', '—')} | {r.get('page_in_batches', '—')} | "
+            f"{r.get('thrash_rounds', '—')} |")
+    s = data["summary"]
+    gate = "PASS" if s["acceptance_ttft_3x_at_64"] else "FAIL"
+    sp64 = s["ttft_speedup_chunked_vs_piggyback"].get("64")
+    lines += ["", f"Acceptance (chunked >= 3x lower TTFT at prompt len 64): "
+              f"{gate}" + (f" ({sp64:.1f}x)." if sp64 else ".")]
+    return "\n".join(lines)
+
+
 def crossdevice_table(path="BENCH_crossdevice.json"):
     """The EXPERIMENTS.md §Cross-device table: population sweep at fixed
     cohort -- peak RSS (the O(cohort) streaming claim), throughput, and the
@@ -244,6 +293,10 @@ if __name__ == "__main__":
     if which == "async":
         print(async_table(sys.argv[2] if len(sys.argv) > 2
                           else "BENCH_async.json"))
+        sys.exit(0)
+    if which == "load":
+        print(load_table(sys.argv[2] if len(sys.argv) > 2
+                         else "BENCH_load.json"))
         sys.exit(0)
     if which in ("all", "sp"):
         print("### Single-pod (16x16)\n")

@@ -261,6 +261,48 @@ def attn_decode(p: dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
     return y, {"k": k, "v": v, "pos": kpos}
 
 
+def attn_prefill(p: dict, cfg: ModelConfig, x: jax.Array, pos: jax.Array,
+                 cache: dict, window: int | None = None,
+                 peft: dict | None = None,
+                 valid: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """Multi-token cached prefill: bulk-insert S new tokens' KV into the
+    cache, then attend each of the S queries against the FULL cache
+    (DESIGN.md §14).  The math per query is identical to one
+    :func:`attn_decode` step -- future in-chunk tokens are masked by the
+    causal test exactly like the empty (``pos == -1``) lanes piggyback
+    prefill would have seen -- which is what the chunked == piggyback
+    token-parity pin relies on.
+
+    x: (B, S, d); pos: (B, S) absolute positions; valid: (B, S) bool --
+    padded tail positions of the final chunk: their KV writes are dropped
+    (scattered out of bounds) and their outputs discarded by the caller.
+    cache: as in :func:`attn_decode`.
+    """
+    b, s = x.shape[:2]
+    q, k_new, v_new = _project_qkv(p, cfg, x, peft=peft)
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k_new = apply_rope(k_new, pos, cfg.rope_theta)
+
+    cap = cache["k"].shape[1]
+    slot = (pos % cap).astype(jnp.int32)                 # ring slots
+    if valid is not None:
+        slot = jnp.where(valid, slot, cap)               # OOB write -> drop
+    bidx = jnp.arange(b)[:, None]
+    k = cache["k"].at[bidx, slot].set(k_new, mode="drop")
+    v = cache["v"].at[bidx, slot].set(v_new, mode="drop")
+    kpos = cache["pos"].at[bidx, slot].set(pos.astype(jnp.int32), mode="drop")
+
+    scores = _gqa_scores(q, k).astype(jnp.float32)       # (B,KV,g,S,C)
+    mask = (kpos >= 0)[:, None, :] & (kpos[:, None, :] <= pos[:, :, None])
+    if window is not None:
+        mask &= (pos[:, :, None] - kpos[:, None, :]) < window
+    scores = jnp.where(mask[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = _gqa_out(probs, v)                             # (B,S,H,hd)
+    y = out.reshape(b, s, -1) @ p["wo"]
+    return y, {"k": k, "v": v, "pos": kpos}
+
+
 # ---------------------------------------------------------------------------
 # MLP
 # ---------------------------------------------------------------------------

@@ -24,7 +24,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import HybridConfig, ModelConfig, SSMConfig
 from repro.models import mamba, moe as moe_lib, rglru
-from repro.models.common import attn_apply, attn_decode, attn_init, mlp_apply, mlp_init, rmsnorm
+from repro.models.common import (attn_apply, attn_decode, attn_init, attn_prefill,
+                                 mlp_apply, mlp_init, rmsnorm)
 from repro.models.moe import DistContext
 from repro.models.peft_glue import apply_hook, block_peft_init
 
@@ -371,6 +372,66 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=jnp.float32,
         cache["img_k"] = jnp.zeros((n_x, batch, n_img, kv, hd), dtype)
         cache["img_v"] = jnp.zeros((n_x, batch, n_img, kv, hd), dtype)
     return cache
+
+
+def model_prefill(params: dict, cfg: ModelConfig, tokens: jax.Array,
+                  pos: jax.Array, cache: dict, *,
+                  valid: jax.Array | None = None,
+                  adapter_id: jax.Array | None = None,
+                  dist: DistContext | None = None) -> tuple[jax.Array, dict]:
+    """Chunked prefill (DESIGN.md §14): consume S prompt tokens in ONE
+    forward pass, bulk-inserting their KV into the decode cache -- the
+    O(1)-dispatch replacement for S piggyback ``model_decode_step`` calls.
+
+    tokens: (B, S) int32; pos: (B, S) absolute positions; valid: (B, S)
+    bool (False marks the padded tail of a final partial chunk: those
+    positions write no KV and their logits are never read).  Returns
+    (logits (B, vocab) at each row's LAST VALID position, new cache) --
+    the logits that sample the first generated token.
+
+    Attention families only (dense / GQA, incl. SWA as long as the chunk
+    fits the ring); recurrent state (ssm/hybrid) and cross-attention
+    prefill still go token-by-token through ``model_decode_step``.
+    """
+    if cfg.family in ("ssm", "hybrid"):
+        raise NotImplementedError(
+            "chunked prefill supports attention-family models; recurrent "
+            "state must be prefilled token-by-token (model_decode_step)")
+    if cfg.cross_attn_every:
+        raise NotImplementedError("chunked prefill does not cover the "
+                                  "gated cross-attention (VLM) path")
+    bb, peft = params["backbone"], params.get("peft", {})
+    b, s = tokens.shape
+    x = bb["embed"][tokens]                                # (B, S, d)
+    baxes = (dist.batch_axes if dist else ("data",)) or None
+    x = _constrain(x, dist, P(baxes, None, None))
+    peft_blocks = peft.get("blocks")
+    window = cfg.swa_window
+
+    def body(h, xs):
+        bp, pb, c = xs
+        hn = rmsnorm(h, bp["ln1"], cfg.norm_eps)
+        y, nc = attn_prefill(bp["attn"], cfg, hn, pos, c, window, peft=pb,
+                             valid=valid)
+        h = h + y
+        h = apply_hook(pb, cfg, "adapter_attn", h, adapter_id=adapter_id)
+        hn = rmsnorm(h, bp["ln2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            m, _ = moe_lib.moe_apply(bp["moe"], cfg, hn, dist, min_capacity=16)
+        else:
+            m = mlp_apply(bp["mlp"], cfg, hn)
+        h = h + m
+        h = apply_hook(pb, cfg, "adapter_mlp", h, adapter_id=adapter_id)
+        return h, nc
+    x, cache = jax.lax.scan(body, x, (bb["blocks"], peft_blocks, cache))
+
+    x = rmsnorm(x, bb["final_norm"], cfg.norm_eps)
+    last = (jnp.sum(valid, axis=1) - 1 if valid is not None
+            else jnp.full((b,), s - 1, jnp.int32))
+    xl = x[jnp.arange(b), last]                            # (B, d)
+    head = bb["embed"].T if cfg.tie_embeddings else bb["head"]
+    logits = (xl @ head).astype(jnp.float32)               # (B, vocab)
+    return logits, cache
 
 
 def _attn_decode_block(bp, peft_b, cfg, x, pos, cache_l, window, img_kv=None,

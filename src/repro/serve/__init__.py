@@ -1,4 +1,6 @@
 from repro.serve.bank import AdapterBank
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, ServeEngine, ServeIncomplete
+from repro.serve.sched import PagingScheduler, SchedStats
 
-__all__ = ["AdapterBank", "Request", "ServeEngine"]
+__all__ = ["AdapterBank", "PagingScheduler", "Request", "SchedStats",
+           "ServeEngine", "ServeIncomplete"]

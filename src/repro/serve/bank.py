@@ -68,6 +68,7 @@ class AdapterBank:
             raise ValueError(f"max_resident={max_resident} out of range "
                              f"(1..{self.n_adapters})")
         self.page_ins = 0
+        self.page_in_batches = 0
         if self.max_resident == self.n_adapters:
             self._host = None                              # fully resident
             self.blocks = jax.tree.map(jnp.asarray, host)
@@ -124,6 +125,64 @@ class AdapterBank:
         self._touch(row)
         self.page_ins += 1
         return row
+
+    def acquire_many(self, adapter_ids, pinned=frozenset()) -> list:
+        """Batched :meth:`acquire` for one admission round: resolve resident
+        rows for every adapter in ``adapter_ids`` (duplicates share a row)
+        and execute ALL page-ins as ONE fused device write instead of one
+        dispatch per adapter (DESIGN.md §14).
+
+        Rows assigned earlier in the batch are implicitly pinned, so a
+        later page-in can never evict an adapter admitted alongside it.
+        Raises when the set of distinct adapters plus ``pinned`` rows
+        exceeds ``max_resident`` -- the engine's ``max_resident >=
+        batch_slots`` invariant makes that unreachable from ``_fill_slots``.
+        """
+        if not self.paged:
+            for a in adapter_ids:
+                if not 0 <= a < self.n_adapters:
+                    raise ValueError(f"adapter_id {a} out of range "
+                                     f"(bank holds {self.n_adapters})")
+            return list(adapter_ids)
+        resident = list(self._resident)
+        assigned: dict[int, int] = {}            # adapter -> row (this batch)
+        page_rows: list[int] = []                # rows to overwrite, in order
+        page_adapters: list[int] = []
+        rows = []
+        for a in adapter_ids:
+            if not 0 <= a < self.n_adapters:
+                raise ValueError(f"adapter_id {a} out of range "
+                                 f"(bank holds {self.n_adapters})")
+            if a in assigned:
+                rows.append(assigned[a])
+                continue
+            if a in resident:
+                row = resident.index(a)
+            else:
+                blocked = set(pinned) | set(assigned.values())
+                victims = [r for r in self._lru if r not in blocked]
+                if not victims:
+                    raise ValueError(
+                        f"cannot page in adapter {a}: all {self.max_resident}"
+                        " resident rows are pinned by active or co-admitted "
+                        "slots (max_resident must be >= batch_slots)")
+                row = victims[0]
+                resident[row] = a
+                page_rows.append(row)
+                page_adapters.append(a)
+            self._touch(row)
+            assigned[a] = row
+            rows.append(row)
+        if page_rows:
+            ridx = jnp.asarray(page_rows, jnp.int32)
+            self.blocks = jax.tree.map(
+                lambda d, h: d.at[ridx].set(
+                    jnp.asarray(h[np.asarray(page_adapters)])),
+                self.blocks, self._host)
+            self.page_ins += len(page_rows)
+            self.page_in_batches += 1
+        self._resident = resident
+        return rows
 
     # ------------------------------------------------------------------
     @classmethod

@@ -1,10 +1,23 @@
-"""Batched serving engine with continuous batching over fixed decode slots.
+"""Batched serving engine: continuous batching, chunked prefill, paging-aware
+admission, and mesh-sharded KV lanes (DESIGN.md §10, §14).
 
-Every engine step runs ONE jitted `model_decode_step` for all B slots.  Each
-slot is independently in a *prefill* phase (teacher-forcing its prompt, one
-token per step -- piggyback prefill) or a *decode* phase (sampling).  When a
-slot finishes its request, the host swaps in the next queued request and
-resets that slot's cache lanes; the jitted step never recompiles.
+Every engine step runs ONE jitted `model_decode_step` for all B slots.  A
+newly admitted request's prompt is consumed by **chunked prefill**: fixed-size
+jitted `model_prefill` calls that bulk-insert the whole chunk's KV into the
+slot's cache lanes, cutting time-to-first-token from O(prompt) engine steps to
+O(prompt / chunk) calls.  The legacy **piggyback** path (one engine step per
+prompt token) is kept as the parity oracle -- both produce the same tokens,
+pinned by tests/test_serve_engine.py.
+
+Admission is delegated to `serve/sched.py::PagingScheduler` when the engine
+has an `AdapterBank`: queued requests group by adapter residency, co-admitted
+adapters page in as ONE batched device write (`AdapterBank.acquire_many`),
+a starvation bound keeps grouping fair, and a thrash detector fires when the
+tenant working set exceeds `max_resident`.
+
+Sampling: greedy, temperature, or top-k (per-request).  Sampling keys derive
+from `(engine seed, request uid, #generated)` via `fold_in`, so a request's
+token stream is independent of batching, admission order, and prefill mode.
 
 Multi-tenant mode (DESIGN.md §10): pass an :class:`~repro.serve.bank.AdapterBank`
 and per-request ``adapter`` ids -- the decode step gathers each slot's TT
@@ -12,12 +25,16 @@ adapter from the device-resident bank, so concurrent requests hit different
 fine-tuned adapters in the SAME batch with zero recompilation and zero
 host-side weight swapping.
 
-Sampling: greedy, temperature, or top-k (per-request).
+Scale-out: pass ``mesh=`` to lay the KV cache lanes out over the device mesh
+(batch slots over ``data``, cache lanes over ``model`` -- the
+`launch/shardings.py::cache_shardings` layout), so slot count scales past one
+chip's HBM; params and the adapter bank are replicated.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import time
 from functools import partial
 
 import jax
@@ -25,8 +42,24 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.models.transformer import init_cache, model_decode_step
+from repro.models.transformer import init_cache, model_decode_step, model_prefill
 from repro.serve.bank import AdapterBank
+from repro.serve.sched import PagingScheduler
+
+
+class ServeIncomplete(RuntimeError):
+    """`run_until_done` hit `max_steps` with work still queued/in flight.
+
+    Raised instead of silently returning so load tests and fuzz suites can
+    never pass vacuously on an engine that stopped making progress."""
+
+    def __init__(self, max_steps: int, queued: int, in_flight: int):
+        self.max_steps = max_steps
+        self.queued = queued
+        self.in_flight = in_flight
+        super().__init__(
+            f"serve loop stopped at max_steps={max_steps} with {queued} "
+            f"request(s) still queued and {in_flight} in flight")
 
 
 @dataclasses.dataclass
@@ -59,10 +92,30 @@ class _Slot:
                 and len(self.generated) >= self.req.max_new_tokens)
 
 
+def _sample_token(logit, key, temp, topk):
+    """Per-slot sampling -- shared verbatim by the decode step (vmapped) and
+    the chunked-prefill first-token sample, so the two paths stay pinned."""
+    greedy = jnp.argmax(logit).astype(jnp.int32)
+    lt = logit / jnp.maximum(temp, 1e-6)
+    kth = jnp.sort(lt)[-jnp.maximum(topk, 1)]
+    lt = jnp.where((topk > 0) & (lt < kth), -jnp.inf, lt)
+    samp = jax.random.categorical(key, lt).astype(jnp.int32)
+    return jnp.where(temp <= 0.0, greedy, samp)
+
+
+def _request_key(base, uid, n_generated):
+    """Key for a request's (n_generated+1)-th token: a pure function of
+    (engine seed, uid, position) -- never of step count or batch shape."""
+    return jax.random.fold_in(jax.random.fold_in(base, uid), n_generated)
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params: dict, batch_slots: int = 4,
                  max_len: int = 512, seed: int = 0,
-                 bank: AdapterBank | None = None):
+                 bank: AdapterBank | None = None,
+                 prefill: str = "chunked", prefill_chunk: int = 32,
+                 sched: PagingScheduler | None = None,
+                 mesh=None, batch_axes=("data",)):
         self.cfg = cfg
         self.params = params
         self.bank = bank
@@ -83,11 +136,43 @@ class ServeEngine:
         self.slots = [_Slot() for _ in range(batch_slots)]
         self.queue: list[Request] = []
         self.finished: list[tuple[Request, list[int]]] = []
+        self.times: dict[int, dict] = {}       # uid -> serving timeline
         self._next_uid = 0
 
-        @jax.jit
+        if prefill not in ("chunked", "piggyback"):
+            raise ValueError(f"prefill must be 'chunked' or 'piggyback', "
+                             f"got {prefill!r}")
+        # chunked prefill covers the attention families whose cache never
+        # ring-wraps mid-prompt; recurrent state (ssm/hybrid), VLM
+        # cross-attention, and capacity-routed MoE prefill token-by-token
+        cap = self.cache["k"].shape[2] if "k" in self.cache else 0
+        chunk_ok = (cfg.family not in ("ssm", "hybrid")
+                    and not cfg.cross_attn_every and cfg.moe is None
+                    and cap >= max_len)
+        self.prefill_mode = prefill if chunk_ok else "piggyback"
+        self.prefill_chunk = max(1, min(int(prefill_chunk), max_len))
+
+        if sched is None and bank is not None:
+            sched = PagingScheduler()
+        self.sched = sched
+
+        self.mesh = mesh
+        cache_out_sh = None
+        if mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.launch.shardings import cache_shardings
+            shapes = jax.tree.map(
+                lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype), self.cache)
+            cache_out_sh = cache_shardings(mesh, cfg, shapes, batch_axes)
+            repl = lambda t: jax.device_put(
+                t, jax.tree.map(lambda _: NamedSharding(mesh, P()), t))
+            self.cache = jax.device_put(self.cache, cache_out_sh)
+            self.params = repl(self.params)
+            if bank is not None:
+                bank.blocks = repl(bank.blocks)
+
         def _step(params, bank_blocks, tokens, pos, cache, key, temps, topks,
-                  active, adapter_rows):
+                  active, adapter_rows, uids, gens):
             if bank_blocks is not None:
                 # bank leaves are (R, L, ...); the layer scan strips the
                 # leading axis, so present them as (L, R, ...) and let each
@@ -101,23 +186,45 @@ class ServeEngine:
             else:
                 logits, cache = model_decode_step(params, cfg, tokens, pos,
                                                   cache)
-            # per-slot sampling
-            keys = jax.random.split(key, tokens.shape[0] + 1)
-            step_keys, new_key = keys[:-1], keys[-1]
-
-            def sample(logit, k, temp, topk):
-                greedy = jnp.argmax(logit).astype(jnp.int32)
-                lt = logit / jnp.maximum(temp, 1e-6)
-                kth = jnp.sort(lt)[-jnp.maximum(topk, 1)]
-                lt = jnp.where((topk > 0) & (lt < kth), -jnp.inf, lt)
-                samp = jax.random.categorical(k, lt).astype(jnp.int32)
-                return jnp.where(temp <= 0.0, greedy, samp)
-
-            sampled = jax.vmap(sample)(logits, step_keys, temps, topks)
+            step_keys = jax.vmap(partial(_request_key, key))(uids, gens)
+            sampled = jax.vmap(_sample_token)(logits, step_keys, temps, topks)
             sampled = jnp.where(active, sampled, 0)
-            return sampled, cache, new_key
+            return sampled, cache
 
-        self._step = _step
+        def _prefill(params, bank_blocks, tokens, pos, valid, cache, slot,
+                     row, key, uid, temp, topk):
+            # slice out the slot's cache lanes (leaves (L, B, C, ...)), run
+            # the whole chunk as one forward, write the lanes back
+            is_lane = lambda a: a.ndim >= 2 and a.shape[1] == self.b
+            lane = jax.tree.map(
+                lambda a: jax.lax.dynamic_slice_in_dim(a, slot, 1, axis=1)
+                if is_lane(a) else a, cache)
+            if bank_blocks is not None:
+                peft = {"blocks": jax.tree.map(
+                    lambda a: jnp.swapaxes(a, 0, 1), bank_blocks)}
+                full = {"backbone": params["backbone"], "peft": peft}
+                logits, lane = model_prefill(full, cfg, tokens, pos, lane,
+                                             valid=valid,
+                                             adapter_id=row[None])
+            else:
+                logits, lane = model_prefill(params, cfg, tokens, pos, lane,
+                                             valid=valid)
+            cache = jax.tree.map(
+                lambda a, l: jax.lax.dynamic_update_slice_in_dim(a, l, slot,
+                                                                 axis=1)
+                if is_lane(a) else l, cache, lane)
+            tok = _sample_token(logits[0], _request_key(key, uid, 0), temp,
+                                topk)
+            return tok, cache
+
+        if cache_out_sh is None:
+            self._step = jax.jit(_step)
+            self._prefill = jax.jit(_prefill)
+        else:
+            # pin the carried cache to its mesh layout across steps
+            self._step = jax.jit(_step, out_shardings=(None, cache_out_sh))
+            self._prefill = jax.jit(_prefill,
+                                    out_shardings=(None, cache_out_sh))
 
     def submit(self, req: Request) -> int:
         if self.bank is None:
@@ -127,9 +234,16 @@ class ServeEngine:
         elif not 0 <= req.adapter < self.bank.n_adapters:
             raise ValueError(f"adapter {req.adapter} out of range (bank "
                              f"holds {self.bank.n_adapters})")
+        if len(req.prompt) + req.max_new_tokens > self.max_len:
+            raise ValueError(
+                f"request needs {len(req.prompt)} prompt + "
+                f"{req.max_new_tokens} new tokens > max_len={self.max_len} "
+                "cache positions")
         req.uid = self._next_uid
         self._next_uid += 1
         self.queue.append(req)
+        self.times[req.uid] = {"submitted": time.perf_counter(),
+                               "prompt_len": len(req.prompt)}
         return req.uid
 
     def swap_peft(self, peft: dict):
@@ -151,58 +265,124 @@ class ServeEngine:
             return x
         self.cache = jax.tree.map(reset, self.cache)
 
-    def _fill_slots(self):
-        for i, s in enumerate(self.slots):
-            if s.req is None and self.queue:
-                row = 0
-                if self.bank is not None:
-                    pinned = {t.adapter_row for t in self.slots
-                              if t.req is not None}
-                    row = self.bank.acquire(self.queue[0].adapter, pinned)
-                    # max_resident >= batch_slots (enforced in __init__) means
-                    # a free slot can always acquire: pinned covers at most
-                    # batch_slots - 1 of >= batch_slots resident rows
-                    assert row is not None
-                s.req = self.queue.pop(0)
-                s.prompt_pos = 0
-                s.generated = []
-                s.adapter_row = row
-                self._zero_slot_cache(i)
+    def _fill_slots(self) -> list[int]:
+        """Admit queued requests into free slots; returns the slot indices
+        that were newly filled this call."""
+        free = [i for i, s in enumerate(self.slots) if s.req is None]
+        if not free or not self.queue:
+            return []
+        if self.sched is not None:
+            if self.bank is None:
+                resident = None
+                max_res = None
+            else:
+                resident = (self.bank.resident_adapters() if self.bank.paged
+                            else list(range(self.bank.n_adapters)))
+                max_res = self.bank.max_resident
+            active = [s.req.adapter for s in self.slots if s.req is not None]
+            picks = self.sched.pick(self.queue, len(free), resident=resident,
+                                    active=active, max_resident=max_res)
+        else:
+            picks = list(range(min(len(free), len(self.queue))))
+        reqs = [self.queue[j] for j in picks]
+        rows = [0] * len(reqs)
+        if self.bank is not None:
+            pinned = {t.adapter_row for t in self.slots if t.req is not None}
+            rows = self.bank.acquire_many([r.adapter for r in reqs], pinned)
+        for j in sorted(picks, reverse=True):
+            del self.queue[j]
+        newly = []
+        for i, req, row in zip(free, reqs, rows):
+            s = self.slots[i]
+            s.req, s.prompt_pos, s.generated, s.adapter_row = req, 0, [], row
+            self._zero_slot_cache(i)
+            newly.append(i)
+        return newly
+
+    def _chunk_prefill(self, i: int):
+        """Consume slot i's whole prompt in fixed-size jitted chunks, then
+        sample its first token (the TTFT path, DESIGN.md §14)."""
+        s = self.slots[i]
+        prompt = s.req.prompt
+        ck = self.prefill_chunk
+        bank_blocks = self.bank.blocks if self.bank is not None else None
+        tok = None
+        for c0 in range(0, len(prompt), ck):
+            chunk = prompt[c0:c0 + ck]
+            n = len(chunk)
+            toks = np.zeros((1, ck), np.int32)
+            toks[0, :n] = chunk
+            pos = (c0 + np.arange(ck, dtype=np.int32))[None]
+            valid = np.zeros((1, ck), bool)
+            valid[0, :n] = True
+            tok, self.cache = self._prefill(
+                self.params, bank_blocks, jnp.asarray(toks),
+                jnp.asarray(pos), jnp.asarray(valid), self.cache,
+                jnp.int32(i), jnp.int32(s.adapter_row), self.key,
+                jnp.int32(s.req.uid), jnp.float32(s.req.temperature),
+                jnp.int32(s.req.top_k))
+        s.prompt_pos = len(prompt)
+        s.generated.append(int(tok))
+        self.times[s.req.uid].setdefault("first_token", time.perf_counter())
+
+    def _retire(self, i: int) -> bool:
+        s = self.slots[i]
+        if s.req is None or not s.done:
+            return False
+        t = self.times[s.req.uid]
+        t["done"] = time.perf_counter()
+        t["n_tokens"] = len(s.generated)
+        self.finished.append((s.req, list(s.generated)))
+        self.slots[i] = _Slot()
+        return True
 
     def step(self) -> int:
         """One engine step for all slots.  Returns #completed requests."""
-        self._fill_slots()
-        tokens, pos, temps, topks, active, rows = [], [], [], [], [], []
+        completed = 0
+        newly = self._fill_slots()
+        if self.prefill_mode == "chunked":
+            for i in newly:
+                self._chunk_prefill(i)
+                completed += self._retire(i)       # max_new_tokens == 1
+        if not any(s.req is not None for s in self.slots):
+            return completed
+
+        tokens, pos, temps, topks, active = [], [], [], [], []
+        rows, uids, gens = [], [], []
         for s in self.slots:
             rows.append(s.adapter_row)
             if s.req is None:
                 tokens.append(0), pos.append(0), temps.append(0.0)
                 topks.append(0), active.append(False)
+                uids.append(0), gens.append(0)
                 continue
             if s.prefilling:
                 tokens.append(s.req.prompt[s.prompt_pos])
                 pos.append(s.prompt_pos)
             else:
-                # generated is never empty here: the step that consumed the
-                # last prompt token appended the first generated token.  Its
-                # absolute position is prompt_pos + len(generated) - 1 --
-                # feeding it one later leaves a hole in the KV cache at
-                # position len(prompt) and shifts every decode rope angle.
+                # generated is never empty here: the step (or prefill call)
+                # that consumed the last prompt token appended the first
+                # generated token.  Its absolute position is
+                # prompt_pos + len(generated) - 1 -- feeding it one later
+                # leaves a hole in the KV cache at position len(prompt) and
+                # shifts every decode rope angle.
                 tokens.append(s.generated[-1])
                 pos.append(s.prompt_pos + len(s.generated) - 1)
             temps.append(s.req.temperature)
             topks.append(s.req.top_k)
             active.append(True)
+            uids.append(s.req.uid)
+            gens.append(len(s.generated))
 
-        sampled, self.cache, self.key = self._step(
+        sampled, self.cache = self._step(
             self.params, self.bank.blocks if self.bank is not None else None,
             jnp.asarray(tokens, jnp.int32),
             jnp.asarray(pos, jnp.int32), self.cache, self.key,
             jnp.asarray(temps, jnp.float32), jnp.asarray(topks, jnp.int32),
-            jnp.asarray(active), jnp.asarray(rows, jnp.int32))
+            jnp.asarray(active), jnp.asarray(rows, jnp.int32),
+            jnp.asarray(uids, jnp.int32), jnp.asarray(gens, jnp.int32))
         sampled = np.asarray(sampled)
 
-        completed = 0
         for i, s in enumerate(self.slots):
             if s.req is None:
                 continue
@@ -212,17 +392,23 @@ class ServeEngine:
                 # first generated token
                 if not s.prefilling:
                     s.generated.append(int(sampled[i]))
+                    self.times[s.req.uid].setdefault("first_token",
+                                                     time.perf_counter())
             else:
                 s.generated.append(int(sampled[i]))
-            if s.done:
-                self.finished.append((s.req, list(s.generated)))
-                self.slots[i] = _Slot()
-                completed += 1
+            completed += self._retire(i)
         return completed
 
-    def run_until_done(self, max_steps: int = 10_000):
+    def run_until_done(self, max_steps: int = 10_000) -> int:
+        """Drain the queue; returns engine steps taken.  Raises
+        :class:`ServeIncomplete` when `max_steps` elapse with requests still
+        queued or in flight (never silently returns partial work)."""
         steps = 0
-        while (self.queue or any(s.req for s in self.slots)) and steps < max_steps:
+        while self.queue or any(s.req is not None for s in self.slots):
+            if steps >= max_steps:
+                raise ServeIncomplete(
+                    max_steps, len(self.queue),
+                    sum(s.req is not None for s in self.slots))
             self.step()
             steps += 1
         return steps

@@ -1,0 +1,120 @@
+"""Paging-aware admission scheduling for the multi-tenant serve engine.
+
+Strict-FIFO admission (``queue.pop(0)``) ignores which adapters are already
+resident in the :class:`~repro.serve.bank.AdapterBank`: under skewed
+multi-tenant traffic it interleaves tenants arbitrarily, paying a page-in
+on almost every admission once the tenant working set exceeds
+``max_resident``.  :class:`PagingScheduler` replaces it (DESIGN.md §14):
+
+  * **residency first** -- queued requests whose adapter is already on
+    device admit before requests that would trigger a page-in;
+  * **grouped page-ins** -- non-resident requests admit grouped by adapter
+    (largest queued group first), so one page-in serves many requests and
+    co-admitted adapters page in as ONE batched device write
+    (``AdapterBank.acquire_many``);
+  * **starvation bound** -- a request passed over ``starvation_bound``
+    times while slots were free is promoted ahead of every grouping
+    preference (FIFO among the starved), so grouping can delay a cold
+    tenant by at most ``starvation_bound`` admission rounds;
+  * **thrash detector** -- fires exactly when the demanded working set
+    (queued + active adapters) exceeds ``max_resident``: the regime where
+    LRU paging degenerates to a page-in per admission and the operator
+    should raise ``max_resident`` or shard tenants across engines.
+
+With ``group_by_adapter=False`` the policy is EXACTLY head-of-line FIFO
+(pinned by ``tests/test_serve_sched.py``), so the scheduler is a strict
+superset of the old admission loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class SchedStats:
+    rounds: int = 0              # pick() calls with capacity + demand
+    admitted: int = 0
+    starvation_admits: int = 0   # admits forced by the fairness bound
+    thrash_rounds: int = 0       # rounds with working set > max_resident
+
+
+class PagingScheduler:
+    """Admission policy over the engine's request queue.
+
+    ``pick(queue, n_free, resident=..., active=..., max_resident=...)``
+    returns indices into ``queue`` (at most ``n_free``) in admission order.
+    ``resident`` is the adapter-id set currently on device (None = no bank:
+    plain FIFO), ``active`` the adapter ids bound to busy slots (for the
+    thrash detector).  Guaranteed progress: with a non-empty queue and
+    ``n_free > 0`` at least one request is always picked.
+    """
+
+    def __init__(self, group_by_adapter: bool = True,
+                 starvation_bound: int = 32):
+        if starvation_bound < 1:
+            raise ValueError(f"starvation_bound must be >= 1, "
+                             f"got {starvation_bound}")
+        self.group_by_adapter = bool(group_by_adapter)
+        self.starvation_bound = int(starvation_bound)
+        self.stats = SchedStats()
+        self.thrashing = False
+        self._waited: dict[int, int] = {}    # request key -> rounds passed over
+
+    @staticmethod
+    def _key(req) -> int:
+        uid = getattr(req, "uid", -1)
+        return uid if uid is not None and uid >= 0 else id(req)
+
+    # ------------------------------------------------------------------
+    def _grouped_order(self, queue, resident: set) -> list[int]:
+        starved, res, groups = [], [], {}
+        for i, r in enumerate(queue):
+            if self._waited.get(self._key(r), 0) >= self.starvation_bound:
+                starved.append(i)                      # FIFO among starved
+            elif r.adapter in resident:
+                res.append(i)                          # no page-in needed
+            else:
+                groups.setdefault(r.adapter, []).append(i)
+        # largest queued group first (one page-in amortized over the most
+        # requests); ties broken by earliest arrival
+        gorder = sorted(groups.values(), key=lambda g: (-len(g), g[0]))
+        return starved + res + [i for g in gorder for i in g]
+
+    def pick(self, queue, n_free: int, *, resident=None, active=(),
+             max_resident: int | None = None) -> list[int]:
+        # thrash detector: fires iff the demanded working set exceeds what
+        # the bank can keep resident (independent of whether we admit)
+        if max_resident is not None:
+            working = {r.adapter for r in queue} | set(active)
+            self.thrashing = len(working) > max_resident
+            if self.thrashing:
+                self.stats.thrash_rounds += 1
+        else:
+            self.thrashing = False
+        if not queue or n_free <= 0:
+            return []
+        self.stats.rounds += 1
+
+        if self.group_by_adapter and resident is not None:
+            order = self._grouped_order(queue, set(resident))
+        else:
+            order = list(range(len(queue)))            # exact FIFO
+        picks = order[: min(n_free, len(queue))]
+
+        chosen = set(picks)
+        self.stats.admitted += len(picks)
+        for i, r in enumerate(queue):
+            k = self._key(r)
+            if i in chosen:
+                if self._waited.get(k, 0) >= self.starvation_bound:
+                    self.stats.starvation_admits += 1
+                self._waited.pop(k, None)
+            else:
+                # aged only when capacity existed: the fairness clock counts
+                # rounds the request COULD have been admitted but was not
+                self._waited[k] = self._waited.get(k, 0) + 1
+        return picks
+
+
+__all__ = ["PagingScheduler", "SchedStats"]

@@ -104,3 +104,140 @@ def test_engine_sampling_respects_temperature():
     e2.run_until_done()
     g2 = {req.uid: g for req, g in e2.finished}
     assert g2[1] == gens[1]
+
+
+# ---------------------------------------------------------------------------
+# Chunked prefill (DESIGN.md §14): parity pin against the piggyback oracle
+# ---------------------------------------------------------------------------
+
+_CHUNK = 4
+# lengths straddling every chunk boundary: 1, chunk-1, chunk, chunk+1, 2ck+3
+_PREFILL_LENS = [1, _CHUNK - 1, _CHUNK, _CHUNK + 1, 2 * _CHUNK + 3]
+
+
+def _prefill_mix():
+    """One request per boundary length, alternating greedy / seeded sampling
+    (the sampling lanes are where a key-derivation mismatch would show)."""
+    reqs = []
+    for j, n in enumerate(_PREFILL_LENS):
+        prompt = [(7 * n + k) % 50 + 1 for k in range(n)]
+        if j % 2 == 0:
+            reqs.append(Request(prompt, max_new_tokens=3))
+        else:
+            reqs.append(Request(prompt, max_new_tokens=4, temperature=0.9,
+                                top_k=5))
+    return reqs
+
+
+def _drain_tokens(engine):
+    for r in _prefill_mix():
+        engine.submit(r)
+    engine.run_until_done()
+    return {req.uid: gen for req, gen in engine.finished}
+
+
+def test_chunked_prefill_matches_piggyback():
+    """Chunked prefill must emit token-for-token what the step-per-prompt-
+    token piggyback path emits, at prompt lengths {1, ck-1, ck, ck+1, 2ck+3},
+    greedy AND seeded sampling.  Holds because (a) bulk-inserted chunk KV is
+    causally masked to exactly the piggyback softmax set and (b) sampling
+    keys derive from (seed, uid, #generated), never from step count."""
+    cfg = get_config("qwen3_4b", smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+    chunked = ServeEngine(cfg, params, batch_slots=2, max_len=64, seed=7,
+                          prefill="chunked", prefill_chunk=_CHUNK)
+    piggy = ServeEngine(cfg, params, batch_slots=2, max_len=64, seed=7,
+                        prefill="piggyback")
+    assert chunked.prefill_mode == "chunked"
+    assert piggy.prefill_mode == "piggyback"
+    got, want = _drain_tokens(chunked), _drain_tokens(piggy)
+    assert set(got) == set(want)
+    for uid in want:
+        assert got[uid] == want[uid], (uid, got[uid], want[uid])
+
+
+def test_chunked_prefill_matches_piggyback_banked():
+    """Same pin through the banked decode/prefill path: per-slot adapter
+    gather must see identical factors whether the prompt entered chunked or
+    token-by-token."""
+    from repro.serve import AdapterBank
+    cfg = get_config("qwen3_4b", smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+
+    def perturbed(seed):
+        leaves, td = jax.tree.flatten(params["peft"])
+        keys = jax.random.split(jax.random.key(seed), len(leaves))
+        return jax.tree.unflatten(td, [
+            l + 0.05 * jax.random.normal(k, l.shape)
+            for l, k in zip(leaves, keys)])
+
+    pefts = [perturbed(31), perturbed(32), perturbed(33)]
+    bb = {"backbone": params["backbone"]}
+
+    def run(mode):
+        engine = ServeEngine(cfg, bb, batch_slots=2, max_len=64, seed=7,
+                             bank=AdapterBank(pefts), prefill=mode,
+                             prefill_chunk=_CHUNK)
+        for j, r in enumerate(_prefill_mix()):
+            r.adapter = j % len(pefts)
+            engine.submit(r)
+        engine.run_until_done()
+        return {req.uid: gen for req, gen in engine.finished}
+
+    got, want = run("chunked"), run("piggyback")
+    assert set(got) == set(want)
+    for uid in want:
+        assert got[uid] == want[uid], (uid, got[uid], want[uid])
+
+
+def test_chunked_prefill_falls_back_when_unsupported():
+    """Capacity-routed MoE prefills token-by-token (router capacity depends
+    on batch composition): requesting chunked must degrade to piggyback and
+    still complete."""
+    cfg = get_config("mixtral_8x22b", smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+    engine = ServeEngine(cfg, params, batch_slots=1, max_len=64,
+                         prefill="chunked")
+    assert engine.prefill_mode == "piggyback"
+    engine.submit(Request(prompt=[3, 1, 4, 1, 5], max_new_tokens=2))
+    engine.run_until_done()
+    assert len(engine.finished[0][1]) == 2
+
+
+def test_engine_records_serving_timeline():
+    """TTFT instrumentation: every finished uid has submitted <= first_token
+    <= done and the generated-token count (bench_load.py consumes these)."""
+    cfg = get_config("qwen3_4b", smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+    engine = ServeEngine(cfg, params, batch_slots=2, max_len=64)
+    engine.submit(Request(prompt=[5, 9, 13], max_new_tokens=3))
+    engine.submit(Request(prompt=[8], max_new_tokens=1))
+    engine.run_until_done()
+    for uid in (0, 1):
+        t = engine.times[uid]
+        assert t["submitted"] <= t["first_token"] <= t["done"]
+    assert engine.times[0]["n_tokens"] == 3
+    assert engine.times[1]["n_tokens"] == 1
+    assert engine.times[0]["prompt_len"] == 3
+
+
+def test_run_until_done_raises_on_incomplete():
+    """Regression: run_until_done used to silently RETURN at max_steps with
+    requests still queued/in flight -- callers (benchmarks, fuzz tests)
+    interpreted the partial drain as success.  It must raise instead."""
+    import pytest
+    from repro.serve.engine import ServeIncomplete
+    cfg = get_config("qwen3_4b", smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+    engine = ServeEngine(cfg, params, batch_slots=1, max_len=64,
+                         prefill="piggyback")
+    engine.submit(Request(prompt=[5, 9, 13], max_new_tokens=6))
+    engine.submit(Request(prompt=[7, 2], max_new_tokens=2))
+    with pytest.raises(ServeIncomplete) as e:
+        engine.run_until_done(max_steps=3)
+    assert e.value.queued + e.value.in_flight >= 1
+    # the engine is still consistent: a further drain finishes the work
+    steps = engine.run_until_done()
+    assert steps > 0
+    assert len(engine.finished) == 2
+    assert engine.times[0]["n_tokens"] == 6

@@ -32,3 +32,61 @@ def test_engine_completes_any_mix(reqs, slots):
     for req, gen in engine.finished:
         assert len(gen) == req.max_new_tokens
         assert all(0 <= t < _CFG.vocab for t in gen)
+
+
+# ---------------------------------------------------------------------------
+# Banked + paged engines: arbitrary mixes over A adapters, max_resident < A
+# ---------------------------------------------------------------------------
+
+def _perturbed_peft(seed):
+    base = _PARAMS["peft"]
+    leaves, td = jax.tree.flatten(base)
+    keys = jax.random.split(jax.random.key(seed), len(leaves))
+    return jax.tree.unflatten(td, [l + 0.05 * jax.random.normal(k, l.shape)
+                                   for l, k in zip(leaves, keys)])
+
+
+_N_ADAPTERS = 4
+_PEFTS = [_perturbed_peft(40 + i) for i in range(_N_ADAPTERS)]
+_BACKBONE = {"backbone": _PARAMS["backbone"]}
+
+banked_req_st = st.builds(
+    Request,
+    prompt=st.lists(st.integers(0, _CFG.vocab - 1), min_size=1, max_size=6),
+    max_new_tokens=st.integers(1, 4),
+    temperature=st.sampled_from([0.0, 0.9]),
+    top_k=st.sampled_from([0, 10]),
+    adapter=st.integers(0, _N_ADAPTERS - 1),
+)
+
+
+@settings(max_examples=3, deadline=None)
+@given(reqs=st.lists(banked_req_st, min_size=1, max_size=6))
+def test_paged_engine_matches_fully_resident(reqs):
+    """A paged bank (max_resident < A) must be pure mechanism: any request
+    mix completes with the requested token counts, and the generated streams
+    equal a fully-resident bank's token-for-token (LRU paging + grouped
+    admission must never change WHAT is computed)."""
+    from repro.serve import AdapterBank
+
+    def run(max_resident):
+        engine = ServeEngine(_CFG, _BACKBONE, batch_slots=2, max_len=64,
+                             seed=3, bank=AdapterBank(
+                                 _PEFTS, max_resident=max_resident))
+        for r in reqs:
+            engine.submit(Request(list(r.prompt), r.max_new_tokens,
+                                  r.temperature, r.top_k, r.adapter))
+        engine.run_until_done(max_steps=500)
+        return engine
+
+    paged = run(max_resident=_N_ADAPTERS - 1)        # 3 < A=4, >= slots=2
+    resident = run(max_resident=None)
+    assert paged.bank.paged and not resident.bank.paged
+    for eng in (paged, resident):
+        assert len(eng.finished) == len(reqs)
+        for req, gen in eng.finished:
+            assert len(gen) == req.max_new_tokens
+            assert all(0 <= t < _CFG.vocab for t in gen)
+    got = {req.uid: gen for req, gen in paged.finished}
+    want = {req.uid: gen for req, gen in resident.finished}
+    assert got == want, "paging changed generated tokens"

@@ -1,0 +1,232 @@
+"""PagingScheduler: admission-order units, fairness/thrash properties, and
+the engine integration (grouped admission pages in less than FIFO).
+
+The policy contract (serve/sched.py, DESIGN.md §14):
+  starved (FIFO)  >  resident adapters (FIFO)  >  non-resident grouped by
+  adapter, largest queued group first, ties by earliest arrival -- and with
+  ``group_by_adapter=False`` the order is EXACTLY head-of-line FIFO.
+"""
+
+import dataclasses
+
+import jax
+import pytest
+from _hypothesis_shim import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.serve.sched import PagingScheduler, SchedStats
+
+
+@dataclasses.dataclass
+class _R:
+    adapter: int
+    uid: int = -1
+
+
+def _queue(adapters, uid0=0):
+    return [_R(a, uid0 + i) for i, a in enumerate(adapters)]
+
+
+# ---------------------------------------------------------------------------
+# Ordering units
+# ---------------------------------------------------------------------------
+
+def test_fifo_recovered_exactly_when_grouping_disabled():
+    sched = PagingScheduler(group_by_adapter=False)
+    q = _queue([3, 1, 3, 2, 1, 0])
+    assert sched.pick(q, 4, resident=[0, 1], max_resident=2) == [0, 1, 2, 3]
+    # and with no bank at all (resident=None) grouping degrades to FIFO too
+    sched2 = PagingScheduler(group_by_adapter=True)
+    assert sched2.pick(q, 3, resident=None) == [0, 1, 2]
+
+
+def test_resident_adapters_admit_before_page_ins():
+    sched = PagingScheduler()
+    # adapters 7 and 9 resident; 5 would page in
+    q = _queue([5, 7, 9, 5])
+    assert sched.pick(q, 3, resident=[7, 9], max_resident=2) == [1, 2, 0]
+
+
+def test_nonresident_groups_batch_largest_first():
+    sched = PagingScheduler()
+    # groups: adapter 3 -> idx [0, 2, 3] (size 3), adapter 4 -> [1, 4]
+    q = _queue([3, 4, 3, 3, 4])
+    assert sched.pick(q, 5, resident=[], max_resident=1) == [0, 2, 3, 1, 4]
+    # tie on size: earliest-arrival group first
+    sched2 = PagingScheduler()
+    q2 = _queue([8, 6, 8, 6])
+    assert sched2.pick(q2, 4, resident=[], max_resident=1) == [0, 2, 1, 3]
+
+
+def test_progress_and_empty_edges():
+    sched = PagingScheduler()
+    assert sched.pick([], 4, resident=[]) == []
+    q = _queue([1, 2])
+    assert sched.pick(q, 0, resident=[]) == []
+    assert sched.stats.rounds == 0          # no capacity => no aging round
+    picks = sched.pick(q, 1, resident=[])
+    assert len(picks) == 1                  # guaranteed progress
+
+
+# ---------------------------------------------------------------------------
+# Starvation bound
+# ---------------------------------------------------------------------------
+
+def test_starvation_bound_promotes_cold_tenant():
+    """A cold-adapter request stuck behind an endless resident-tenant stream
+    must be admitted within starvation_bound (+1 for the promoting round)
+    admission rounds, and counted in stats.starvation_admits."""
+    bound = 5
+    sched = PagingScheduler(starvation_bound=bound)
+    victim = _R(adapter=99, uid=1000)
+    queue = [victim]
+    admitted_at = None
+    for rnd in range(bound + 2):
+        queue.append(_R(adapter=0, uid=rnd))        # fresh resident traffic
+        picks = sched.pick(queue, 1, resident=[0], max_resident=1)
+        assert len(picks) == 1
+        chosen = queue.pop(picks[0])
+        if chosen is victim:
+            admitted_at = rnd
+            break
+    assert admitted_at is not None, "victim starved past the bound"
+    assert admitted_at <= bound + 1
+    assert sched.stats.starvation_admits == 1
+
+
+def test_starved_requests_admit_fifo_among_themselves():
+    bound = 2
+    sched = PagingScheduler(starvation_bound=bound)
+    v1, v2 = _R(adapter=50, uid=100), _R(adapter=60, uid=101)
+    queue = [v1, v2]
+    for rnd in range(bound):                        # age both past the bound
+        queue.append(_R(adapter=0, uid=rnd))
+        picks = sched.pick(queue, 1, resident=[0], max_resident=1)
+        queue.pop(picks[0])
+    picks = sched.pick(queue, 2, resident=[0], max_resident=1)
+    assert [queue[i] for i in picks[:2]] == [v1, v2]
+
+
+# ---------------------------------------------------------------------------
+# Thrash detector: fires iff working set > max_resident
+# ---------------------------------------------------------------------------
+
+def _thrash_case(queued_adapters, active, max_resident):
+    sched = PagingScheduler()
+    sched.pick(_queue(queued_adapters), 1, resident=[],
+               active=tuple(active), max_resident=max_resident)
+    working = set(queued_adapters) | set(active)
+    assert sched.thrashing == (len(working) > max_resident), \
+        (queued_adapters, active, max_resident)
+    return sched
+
+
+def test_thrash_fires_iff_working_set_exceeds_resident():
+    s = _thrash_case([0, 1, 2], active=[3], max_resident=3)   # 4 > 3: fires
+    assert s.stats.thrash_rounds == 1
+    s = _thrash_case([0, 1, 0, 1], active=[2], max_resident=3)  # 3 <= 3: no
+    assert s.stats.thrash_rounds == 0
+    # detector runs even when nothing can be admitted (n_free=0)
+    sched = PagingScheduler()
+    sched.pick(_queue([0, 1, 2, 3]), 0, resident=[], max_resident=2)
+    assert sched.thrashing
+    # no bank (max_resident=None): never thrashing
+    sched2 = PagingScheduler()
+    sched2.pick(_queue([0, 1, 2]), 1, resident=None)
+    assert not sched2.thrashing
+
+
+@settings(max_examples=50, deadline=None)
+@given(queued=st.lists(st.integers(0, 5), min_size=0, max_size=8),
+       active=st.lists(st.integers(0, 5), min_size=0, max_size=3),
+       max_resident=st.integers(1, 6),
+       n_free=st.integers(0, 4))
+def test_thrash_property(queued, active, max_resident, n_free):
+    sched = PagingScheduler()
+    picks = sched.pick(_queue(queued), n_free, resident=[],
+                       active=tuple(active), max_resident=max_resident)
+    working = set(queued) | set(active)
+    assert sched.thrashing == (len(working) > max_resident)
+    assert len(picks) == min(n_free, len(queued))
+    assert sorted(set(picks)) == sorted(picks) or len(set(picks)) == len(picks)
+    assert all(0 <= i < len(queued) for i in picks)
+
+
+@settings(max_examples=30, deadline=None)
+@given(adapters=st.lists(st.integers(0, 4), min_size=1, max_size=10),
+       resident=st.lists(st.integers(0, 4), min_size=0, max_size=3,
+                         unique=True),
+       grouping=st.booleans())
+def test_scheduler_is_a_permutation_prefix(adapters, resident, grouping):
+    """pick() must return a prefix of a permutation of the queue indices:
+    no duplicates, no out-of-range, no starvation of the HEAD past the bound
+    when run to exhaustion."""
+    sched = PagingScheduler(group_by_adapter=grouping)
+    queue = _queue(adapters)
+    seen = []
+    for _ in range(len(adapters)):
+        picks = sched.pick(queue, 1, resident=list(resident),
+                           max_resident=max(len(resident), 1))
+        assert len(picks) == 1
+        seen.append(queue.pop(picks[0]).uid)
+    assert sorted(seen) == sorted(r.uid for r in _queue(adapters))
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: grouped admission pages in no more than FIFO, same tokens
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_engine_grouped_admission_reduces_page_ins():
+    from repro.configs.base import get_config
+    from repro.models.transformer import model_init
+    from repro.serve import AdapterBank, Request, ServeEngine
+
+    cfg = get_config("qwen3_4b", smoke=True)
+    params = model_init(jax.random.key(0), cfg)
+
+    def perturbed(seed):
+        leaves, td = jax.tree.flatten(params["peft"])
+        keys = jax.random.split(jax.random.key(seed), len(leaves))
+        return jax.tree.unflatten(td, [
+            l + 0.05 * jax.random.normal(k, l.shape)
+            for l, k in zip(leaves, keys)])
+
+    pefts = [perturbed(70 + i) for i in range(4)]
+    bb = {"backbone": params["backbone"]}
+    # adversarial-for-FIFO arrival order: adapters interleave so head-of-line
+    # admission alternates page-ins while grouping can batch each tenant
+    order = [0, 3, 1, 2, 0, 3, 1, 2, 0, 3, 1, 2]
+
+    def run(sched):
+        engine = ServeEngine(cfg, bb, batch_slots=2, max_len=64, seed=5,
+                             bank=AdapterBank(pefts, max_resident=2),
+                             sched=sched)
+        for a in order:
+            engine.submit(Request(prompt=[a + 1, 7], max_new_tokens=2,
+                                  adapter=a))
+        engine.run_until_done(max_steps=500)
+        return engine
+
+    grouped = run(PagingScheduler(group_by_adapter=True))
+    fifo = run(PagingScheduler(group_by_adapter=False))
+    # identical results...
+    got = {r.uid: g for r, g in grouped.finished}
+    want = {r.uid: g for r, g in fifo.finished}
+    assert got == want
+    # ...with no more page-in traffic (strictly less on this trace)
+    assert grouped.bank.page_ins < fifo.bank.page_ins, \
+        (grouped.bank.page_ins, fifo.bank.page_ins)
+    # page-ins were batched: fewer device writes than adapters paged
+    assert grouped.bank.page_in_batches <= grouped.bank.page_ins
+    assert isinstance(grouped.sched.stats, SchedStats)
+    assert grouped.sched.stats.admitted == len(order)
+    assert grouped.sched.stats.thrash_rounds > 0        # 4 tenants > 2 rows
+
+
+if not HAVE_HYPOTHESIS:
+    # plain twins so the property surface keeps SOME coverage without
+    # hypothesis installed (the shim skips the @given tests)
+    def test_thrash_property_plain():
+        for queued, active, mr in [([0, 1, 2], [3], 3), ([0, 0], [], 1),
+                                   ([], [1, 2], 1), ([4], [4], 1)]:
+            _thrash_case(queued, active, mr)
