@@ -31,7 +31,8 @@ if __package__ in (None, ""):                 # `python benchmarks/bench_kernel.
 
 from benchmarks.common import row, time_us, write_bench_json
 from repro.core.tt import make_tt_spec, tt_init, tt_matvec
-from repro.kernels.ops import select_block_b, tt_linear
+from repro.kernels import autotune
+from repro.kernels.ops import select_block_b, tt_adapter_banked, tt_linear
 
 
 def _flops_tt(spec, batch):
@@ -67,9 +68,13 @@ def _bench_shape(p, q, batch, reps, results):
 
     fl_tt = _flops_tt(spec, batch)
     fl_d = 2 * batch * p * q
+    # the autotuned column: the measured-cache block for this spec on this
+    # backend, or None when no compiled measurement exists (the explicit
+    # interpret-mode skip -- see kernels/autotune.py)
     derived = {"flops_dense_over_tt": fl_d / fl_tt,
                "param_bytes_ratio": spec.dense_params / spec.n_params,
-               "block_b": select_block_b(spec)}
+               "block_b": select_block_b(spec),
+               "block_b_autotuned": autotune.lookup("chain", (spec,))}
 
     for impl, (fwd, params) in _impls(spec, fs, w).items():
         j_fwd = jax.jit(fwd)
@@ -99,6 +104,65 @@ def _bench_shape(p, q, batch, reps, results):
                         "us": timings, **derived})
 
 
+def _bench_banked(p, q, batch, reps, results, n_adapters=8):
+    """Banked multi-tenant kernel, f32 vs int8 bank (DESIGN.md §2): the same
+    per-row chain, but the int8 bank holds the factors at 1 byte/param +
+    4 B/leaf of scales -- ~1/4 the resident VMEM, which is what the
+    ``max_resident_*`` capacity columns (and the >= 2x acceptance bar)
+    measure.  Dequantize-on-read keeps outputs within the ``quantize_leaf``
+    error bound of the f32 bank."""
+    from repro.fed.compress import quantize_leaf
+    from repro.kernels.ops import (bank_bytes, max_bank_adapters,
+                                   select_block_b_banked)
+
+    sd, su = make_tt_spec(p, q, 5), make_tt_spec(q, p, 5)
+    keys = iter(jax.random.split(jax.random.key(5), 64))
+    down = [jnp.stack([0.2 * jax.random.normal(next(keys), s)
+                       for _ in range(n_adapters)])
+            for s in sd.factor_shapes()]
+    up = [jnp.stack([0.2 * jax.random.normal(next(keys), s)
+                     for _ in range(n_adapters)])
+          for s in su.factor_shapes()]
+    x = jax.random.normal(jax.random.key(6), (batch, p))
+    aid = jnp.arange(batch, dtype=jnp.int32) % n_adapters
+
+    qd, qu, sc_d, sc_u = [], [], [], []
+    for src, qs, ss in ((down, qd, sc_d), (up, qu, sc_u)):
+        for f in src:
+            pairs = [quantize_leaf(f[a]) for a in range(n_adapters)]
+            qs.append(jnp.stack([pq for pq, _ in pairs]))
+            ss.append(jnp.stack([jnp.float32(s) for _, s in pairs]))
+
+    variants = {
+        "banked_f32": (lambda: tt_adapter_banked(down, up, sd, su, x, aid),
+                       "f32"),
+        "banked_int8": (lambda: tt_adapter_banked(
+            qd, qu, sd, su, x, aid, down_scales=sc_d, up_scales=sc_u,
+            bank_dtype="int8"), "int8"),
+    }
+    outs = {}
+    for name, (fn, dtype) in variants.items():
+        jfn = jax.jit(fn)
+        outs[name] = jax.block_until_ready(jfn())
+        us = time_us(jfn, reps)
+        cap = max_bank_adapters(sd, su, bank_dtype=dtype)
+        derived = {
+            "bank_dtype": dtype, "n_adapters": n_adapters,
+            "bank_bytes": bank_bytes(n_adapters, sd, su, bank_dtype=dtype),
+            "max_resident_adapters": cap,
+            "block_b": select_block_b_banked(n_adapters, sd, su,
+                                             bank_dtype=dtype),
+            "block_b_autotuned": autotune.lookup(
+                "banked", (sd, su), n_adapters=n_adapters, bank_dtype=dtype)}
+        row(f"kernel_banked[{p}x{q}][{name}]", us,
+            f"max_resident={cap}")
+        results.append({"shape": f"{p}x{q}", "impl": name, "batch": batch,
+                        "us": {"fwd": us}, **derived})
+    dev = float(jnp.max(jnp.abs(outs["banked_f32"] - outs["banked_int8"])))
+    results.append({"shape": f"{p}x{q}", "impl": "banked_int8_parity",
+                    "max_abs_dev_vs_f32": dev})
+
+
 def run(batch: int | None = None, reps: int | None = None,
         smoke: bool = False,
         out_json: str | None = None) -> list[dict]:
@@ -123,6 +187,9 @@ def run(batch: int | None = None, reps: int | None = None,
     results: list[dict] = []
     for (p, q) in shapes:
         _bench_shape(p, q, batch, reps, results)
+    # banked multi-tenant column (f32 vs int8 bank) on the paper shape only
+    _bench_banked(768, 64, min(batch, 512), reps, results,
+                  n_adapters=4 if smoke else 8)
     payload = {"meta": {"batch": batch, "reps": reps, "smoke": smoke,
                         "backend": jax.default_backend(),
                         "pallas_interpret": interpret},

@@ -16,7 +16,12 @@ in flight.  Two ways to serve it:
 
 Both engines run the same jitted ``model_decode_step`` math per step, so
 tokens/sec resolves exactly the batching win (≈ min(A, slots)x, minus the
-per-row factor-gather overhead).  Sweeps adapters x slots x {greedy, top-k}.
+per-row factor-gather overhead).  Sweeps adapters x slots x {greedy, top-k},
+each point also with the int8-quantized bank (``banked_int8`` --
+``AdapterBank(quantize=True)``, DESIGN.md §2): same decode tokens within the
+quantization error bound, ~1/4 the resident bank bytes.  The
+``bank_capacity`` section reports how many adapters each bank dtype holds
+before paging under the same kernel VMEM budget (the >= 2x int8 headline).
 Results go to ``BENCH_serve.json`` -- the third pillar of the perf
 trajectory after BENCH_kernel.json and BENCH_round.json; render with
 ``python scripts/render_experiments.py serve``.
@@ -77,8 +82,8 @@ def _drain(engine) -> tuple[int, int]:
 
 
 def bench_banked(cfg, backbone, adapters, slots: int, sampling: str,
-                 reps: int, max_new: int) -> dict:
-    bank = AdapterBank(adapters)
+                 reps: int, max_new: int, quantize: bool = False) -> dict:
+    bank = AdapterBank(adapters, quantize=quantize)
     engine = ServeEngine(cfg, {"backbone": backbone}, batch_slots=slots,
                          max_len=MAX_LEN, bank=bank)
     A = len(adapters)
@@ -89,6 +94,7 @@ def bench_banked(cfg, backbone, adapters, slots: int, sampling: str,
         return _drain(engine)
 
     one_pass()                                   # compile + warm
+    tokens_first = [g for _, g in engine.finished]
     t0 = time.perf_counter()
     steps = tokens = 0
     for _ in range(reps):
@@ -96,9 +102,45 @@ def bench_banked(cfg, backbone, adapters, slots: int, sampling: str,
         steps += s
         tokens += t
     dt = time.perf_counter() - t0
-    return {"engine": "banked", "adapters": A, "slots": slots,
+    return {"engine": "banked_int8" if quantize else "banked",
+            "adapters": A, "slots": slots,
             "sampling": sampling, "steps": steps, "tokens": tokens,
-            "wall_s": dt, "tokens_per_sec": tokens / dt}
+            "wall_s": dt, "tokens_per_sec": tokens / dt,
+            "bank_nbytes_resident": bank.nbytes_resident,
+            "bank_error_bound": bank.error_bound(),
+            "_tokens": tokens_first}
+
+
+def bench_banked_int8(cfg, backbone, adapters, slots, sampling, reps,
+                      max_new) -> dict:
+    return bench_banked(cfg, backbone, adapters, slots, sampling, reps,
+                        max_new, quantize=True)
+
+
+def bank_capacity_rows(cfg) -> list[dict]:
+    """The int8-bank headline: adapters resident before paging under the SAME
+    kernel VMEM budget, f32 vs int8, for the served adapter spec -- plus the
+    block table at representative A so the working-set story is visible."""
+    from repro.kernels.ops import (bank_bytes, max_bank_adapters,
+                                   select_block_b_banked)
+    from repro.models.peft_glue import adapter_spec
+    spec = adapter_spec(cfg)
+    sd, su = spec.down, spec.up
+    out = []
+    for dtype in ("f32", "int8"):
+        cap = max_bank_adapters(sd, su, bank_dtype=dtype)
+        out.append({
+            "bank_dtype": dtype, "max_resident_adapters": cap,
+            "bytes_per_adapter": bank_bytes(1, sd, su, bank_dtype=dtype),
+            "block_b_table": {
+                str(a): select_block_b_banked(a, sd, su, bank_dtype=dtype)
+                for a in (8, 64, min(256, cap))}})
+        row(f"serve[bank_capacity][{dtype}]", 0.0,
+            f"max_resident_adapters={cap}")
+    out.append({"capacity_ratio_int8_over_f32":
+                out[1]["max_resident_adapters"]
+                / out[0]["max_resident_adapters"]})
+    return out
 
 
 def bench_sequential(cfg, backbone, adapters, slots: int, sampling: str,
@@ -143,11 +185,16 @@ def summarize(results: list[dict]) -> list[dict]:
     for (a, s, samp), group in sorted(by.items()):
         if "banked" not in group or "sequential" not in group:
             continue
-        out.append({
+        entry = {
             "adapters": a, "slots": s, "sampling": samp,
             "speedup_banked_vs_sequential":
                 group["banked"]["tokens_per_sec"]
-                / group["sequential"]["tokens_per_sec"]})
+                / group["sequential"]["tokens_per_sec"]}
+        if "banked_int8" in group:
+            entry["speedup_banked_int8_vs_sequential"] = (
+                group["banked_int8"]["tokens_per_sec"]
+                / group["sequential"]["tokens_per_sec"])
+        out.append(entry)
     return out
 
 
@@ -166,21 +213,35 @@ def run(smoke: bool = False, out_json: str | None = None) -> dict:
 
     adapters_all = make_adapters(cfg, max(a for a, _ in grid))
     results = []
+    parity = []
     for sampling in samplings:
         for n_adapters, slots in grid:
             adapters = adapters_all[:n_adapters]
-            for fn in (bench_banked, bench_sequential):
+            group = {}
+            for fn in (bench_banked, bench_banked_int8, bench_sequential):
                 r = fn(cfg, backbone, adapters, slots, sampling, reps,
                        max_new)
-                results.append(r)
+                group[r["engine"]] = r
                 row(f"serve[{r['engine']}][{n_adapters}a x {slots}s]"
                     f"[{sampling}]", 1e6 / r["tokens_per_sec"],
                     f"tokens_per_sec={r['tokens_per_sec']:.1f}")
+                results.append({k: v for k, v in r.items()
+                                if not k.startswith("_")})
+            # banked int8 decode must reproduce the f32 bank's greedy tokens
+            # (quantization error is far inside the decision margins)
+            if sampling == "greedy":
+                parity.append({
+                    "adapters": n_adapters, "slots": slots,
+                    "int8_token_parity":
+                        group["banked"]["_tokens"]
+                        == group["banked_int8"]["_tokens"]})
 
     payload = {"meta": {"backend": jax.default_backend(), "smoke": smoke,
                         "config": cfg.name, "prompt_len": len(PROMPT),
                         "max_new_tokens": max_new, "reps": reps},
                "results": results,
+               "bank_capacity": bank_capacity_rows(cfg),
+               "int8_parity": parity,
                "summary": summarize(results)}
     write_bench_json(out_json, payload)
     return payload

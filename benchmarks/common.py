@@ -68,13 +68,28 @@ def write_bench_json(path: str, payload: dict) -> str:
     (EXPERIMENTS.md §Perf tables are rendered from these via
     scripts/render_experiments.py).
 
-    Guard: interpret-mode numbers (``meta.pallas_interpret`` true -- Pallas
-    emulated off-TPU, orders of magnitude slow) must never land on a
-    committed trajectory path; they only go to ``*.smoke.*`` files (CI
-    artifacts)."""
+    Every payload is stamped with ``meta.backend`` and ``meta.interpret``
+    (true iff this process built any Pallas kernel in interpret mode --
+    ``kernels/ops.py::interpret_kernels_built``, which the suites cannot
+    forget to set the way a hand-rolled ``pallas_interpret`` flag can).
+
+    Guard: interpret-mode numbers (Pallas emulated off-TPU, orders of
+    magnitude slow) must never land on a committed trajectory path; they
+    only go to ``*.smoke.*`` files (CI artifacts).  Suites that never touch
+    Pallas (the jnp serve/round/async paths) stay writable from any
+    backend -- their numbers are real compiled-XLA measurements."""
     import json
 
-    if payload.get("meta", {}).get("pallas_interpret") and ".smoke." not in path:
+    import jax
+
+    from repro.kernels.ops import interpret_kernels_built
+
+    interpret = bool(payload.get("meta", {}).get("pallas_interpret")
+                     or interpret_kernels_built())
+    payload.setdefault("meta", {})
+    payload["meta"]["backend"] = jax.default_backend()
+    payload["meta"]["interpret"] = interpret
+    if interpret and ".smoke." not in path:
         raise ValueError(
             f"refusing to write interpret-mode (non-TPU) results to the "
             f"committed trajectory path {path!r}; interpret numbers are not "

@@ -181,7 +181,7 @@ def serve_table(path="BENCH_serve.json"):
              "|---|---|---|---|---|---|---|"]
     for (a, s, samp), group in sorted(by.items()):
         seq_tps = group.get("sequential", {}).get("tokens_per_sec")
-        for eng in ("sequential", "banked"):
+        for eng in ("sequential", "banked", "banked_int8"):
             if eng not in group:
                 continue
             r = group[eng]
@@ -189,6 +189,30 @@ def serve_table(path="BENCH_serve.json"):
                      if seq_tps else "—")
             lines.append(f"| {a} | {s} | {samp} | {eng} | {r['steps']} | "
                          f"{r['tokens_per_sec']:.1f} | {speed} |")
+    cap = {r["bank_dtype"]: r for r in data.get("bank_capacity", [])
+           if "bank_dtype" in r}
+    if cap:
+        ratio = next((r["capacity_ratio_int8_over_f32"]
+                      for r in data["bank_capacity"]
+                      if "capacity_ratio_int8_over_f32" in r), None)
+        lines += ["",
+                  "Bank capacity under the kernel VMEM budget "
+                  "(`kernels/ops.py::max_bank_adapters`):",
+                  "",
+                  "| bank dtype | bytes/adapter | max resident adapters |",
+                  "|---|---|---|"]
+        for dt in ("f32", "int8"):
+            if dt in cap:
+                lines.append(f"| {dt} | {cap[dt]['bytes_per_adapter']} | "
+                             f"{cap[dt]['max_resident_adapters']} |")
+        if ratio is not None:
+            lines.append(f"\nint8 capacity ratio: **{ratio:.1f}x** f32.")
+    parity = data.get("int8_parity", [])
+    if parity:
+        ok = all(r["int8_token_parity"] for r in parity)
+        grid = ", ".join(f"A={r['adapters']}" for r in parity)
+        lines.append(f"\nint8 greedy token parity vs the f32 bank ({grid}): "
+                     f"**{'exact' if ok else 'DIVERGED'}**.")
     return "\n".join(lines)
 
 

@@ -198,7 +198,29 @@ def adapter_apply_banked(bank: dict, spec: AdapterSpec, x: jax.Array,
     Residual included, like :func:`adapter_apply`.  With ``use_kernel`` the
     fused banked Pallas kernel selects factors per row inside VMEM; otherwise
     the gather+vmap jnp oracle (kernels/ref.py) runs -- both give one decode
-    step that serves B rows hitting B different adapters."""
+    step that serves B rows hitting B different adapters.
+
+    A quantized bank (``AdapterBank(quantize=True)``) carries int8 factor
+    leaves plus per-leaf ``down_scale``/``up_scale`` (A,) f32 scales; the
+    kernel dequantizes on read, the jnp path dequantizes the gathered rows."""
+    if "down_scale" in bank:
+        if spec.use_kernel:
+            from repro.kernels.ops import tt_adapter_banked
+            return x + tt_adapter_banked(
+                bank["down"], bank["up"], spec.down, spec.up, x, adapter_id,
+                down_scales=bank["down_scale"], up_scales=bank["up_scale"],
+                bank_dtype="int8")
+        from repro.kernels.ref import tt_adapter_banked_ref
+
+        def deq(qs, ss):
+            return [q.astype(jnp.float32)
+                    * s.reshape(s.shape + (1,) * (q.ndim - 1))
+                    for q, s in zip(qs, ss)]
+
+        return x + tt_adapter_banked_ref(
+            deq(bank["down"], bank["down_scale"]),
+            deq(bank["up"], bank["up_scale"]),
+            spec.down, spec.up, x, adapter_id)
     if spec.use_kernel:
         from repro.kernels.ops import tt_adapter_banked
         return x + tt_adapter_banked(bank["down"], bank["up"], spec.down,

@@ -1,0 +1,345 @@
+"""Measured block-size autotuner for the Pallas TT kernels.
+
+The static ``{512, 256, 128}`` table in ``ops.py`` picks the largest batch
+tile whose chain working set fits the VMEM budget -- a model, not a
+measurement.  This module times every candidate for a given (kind, spec
+signature) on the CURRENT backend, compares the winner against the
+``launch/roofline.py`` bandwidth/compute prediction, and persists the result
+in a JSON cache that ``select_block_b`` / ``select_block_b_banked`` consult
+at trace time.
+
+Priority order (both selectors):
+
+  1. ``REPRO_TT_BLOCK_B``  -- absolute override, never consults the cache
+  2. cache entry for (signature, backend) -- this module's output
+  3. static VMEM heuristic -- the no-cache fallback
+
+Measurement only happens through :func:`measure` / the CLI -- ``lookup``
+never times anything.  Compiled backends only: off-TPU Pallas runs
+interpret=True and its timings are emulation artifacts, so ``measure``
+records an EXPLICIT skip entry (``reason="interpret"``) instead of a block.
+``allow_interpret=True`` exists for the test machinery; entries it produces
+are marked ``interpret: true`` and ignored by ``lookup``.
+
+Cache location: ``REPRO_TT_AUTOTUNE_CACHE`` (default
+``~/.cache/repro/tt_autotune.json``).  ``REPRO_TT_AUTOTUNE=off`` disables
+cache consultation entirely (ops falls straight through to the heuristic).
+
+CLI (CI bench-smoke runs this and uploads the cache as an artifact)::
+
+    PYTHONPATH=src python -m repro.kernels.autotune --smoke [--out PATH]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tt import TTSpec, make_tt_spec, tt_init
+from repro.kernels import ops
+from repro.kernels.tt_contract import (tt_adapter_banked_int8_kernel,
+                                       tt_adapter_banked_kernel,
+                                       tt_adapter_kernel, tt_linear_kernel)
+from repro.launch.roofline import HBM_BW, PEAK_FLOPS
+
+CACHE_VERSION = 1
+_DEFAULT_CACHE = "~/.cache/repro/tt_autotune.json"
+
+# (path, mtime_ns) -> parsed cache; re-stats per lookup so test round-trips
+# and concurrent CLI writes are picked up without re-parsing every call.
+_LOADED: dict[str, tuple[int, dict]] = {}
+
+
+def cache_path() -> Path:
+    return Path(os.environ.get("REPRO_TT_AUTOTUNE_CACHE",
+                               _DEFAULT_CACHE)).expanduser()
+
+
+def spec_signature(kind: str, specs: tuple, n_adapters: int = 0,
+                   bank_dtype: str = "f32") -> str:
+    """Stable cache key: kernel kind + every spec's full shape tuple (+ bank
+    geometry for the banked kind).  Same spec + kind -> same key, always."""
+    parts = [kind]
+    for s in specs:
+        cores = "x".join(str(c) for c in s.core_dims)
+        parts.append(f"{s.in_dim}-{s.out_dim}.c{cores}.s{s.split}.r{s.rank}")
+    if kind == "banked":
+        parts.append(f"A{n_adapters}.{bank_dtype}")
+    return "|".join(parts)
+
+
+def _read_cache(path: Path) -> dict | None:
+    try:
+        mtime = path.stat().st_mtime_ns
+    except OSError:
+        return None
+    key = str(path)
+    hit = _LOADED.get(key)
+    if hit is not None and hit[0] == mtime:
+        return hit[1]
+    try:
+        data = json.loads(path.read_text())
+    except (OSError, json.JSONDecodeError):
+        return None
+    if not isinstance(data, dict) or data.get("version") != CACHE_VERSION:
+        return None
+    _LOADED[key] = (mtime, data)
+    return data
+
+
+def lookup(kind: str, specs: tuple, *, n_adapters: int = 0,
+           bank_dtype: str = "f32") -> int | None:
+    """Cached measured block for (signature, current backend), or None.
+
+    Skip records (interpret-mode measurement refusals) and entries produced
+    under ``allow_interpret`` both return None: only compiled-backend
+    measurements may steer block selection.
+    """
+    data = _read_cache(cache_path())
+    if data is None:
+        return None
+    entry = data.get("entries", {}).get(
+        spec_signature(kind, specs, n_adapters, bank_dtype), {}).get(
+        jax.default_backend())
+    if not entry or entry.get("skipped") or entry.get("interpret"):
+        return None
+    block = entry.get("block_b")
+    if not isinstance(block, int) or block <= 0:
+        return None
+    return block
+
+
+def save(entries: dict[str, dict], path: Path | None = None) -> Path:
+    """Merge measured entries into the cache file (entry[sig][backend])."""
+    path = cache_path() if path is None else path
+    data = _read_cache(path) or {"version": CACHE_VERSION, "entries": {}}
+    for sig, per_backend in entries.items():
+        data["entries"].setdefault(sig, {}).update(per_backend)
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(data, indent=1, sort_keys=True) + "\n")
+    _LOADED.pop(str(path), None)
+    return path
+
+
+# ---------------------------------------------------------------------------
+# Roofline prediction
+# ---------------------------------------------------------------------------
+
+def _chain_flops_per_row(spec: TTSpec) -> float:
+    """Analytic fwd chain FLOPs per batch row (fold + expand GEMM steps)."""
+    total = 0.0
+    r = spec.ranks
+    rest = spec.in_dim
+    for j in range(spec.split):
+        rest //= spec.core_dims[j]
+        total += 2.0 * rest * r[j] * spec.core_dims[j] * r[j + 1]
+    pre = 1
+    for j in range(spec.split, spec.order):
+        total += 2.0 * pre * r[j] * spec.core_dims[j] * r[j + 1]
+        pre *= spec.core_dims[j]
+    return total
+
+
+def roofline_ms(kind: str, specs: tuple, block_b: int, batch: int,
+                n_adapters: int = 0, bank_dtype: str = "f32") -> float:
+    """Predicted kernel ms for ``batch`` rows at this block size.
+
+    The block size enters through bank amortization: the factor bank (whole
+    bank for the banked kind, the factor set otherwise) is re-read once per
+    grid step, so its HBM cost scales with ``batch / block_b`` while the
+    streamed activations are block-independent.  This is the model the
+    measured table is compared against -- larger blocks win until the
+    per-row working set spills VMEM, which only the measurement sees.
+    """
+    flops = batch * sum(_chain_flops_per_row(s) for s in specs)
+    io = 4.0 * batch * (specs[0].in_dim + specs[-1].out_dim)
+    if kind == "banked":
+        resident = float(ops.bank_bytes(n_adapters, *specs,
+                                        bank_dtype=bank_dtype))
+        io += 4.0 * batch * n_adapters          # streamed one-hot selectors
+    else:
+        resident = 4.0 * sum(s.n_params for s in specs)
+    io += resident * (batch / block_b)
+    return 1e3 * max(flops / PEAK_FLOPS, io / HBM_BW)
+
+
+# ---------------------------------------------------------------------------
+# Measurement
+# ---------------------------------------------------------------------------
+
+def _build_case(kind: str, specs: tuple, block_b: int, batch: int,
+                n_adapters: int, bank_dtype: str, interpret: bool):
+    """(fn, args) for one timed candidate, inputs deterministic per spec."""
+    key = jax.random.key(0)
+    x = jax.random.normal(jax.random.key(1), (batch, specs[0].in_dim),
+                          jnp.float32)
+    if kind == "chain" and len(specs) == 1:
+        fs = tuple(tt_init(key, specs[0], zero_last=False))
+        fn = tt_linear_kernel(specs[0], block_b, interpret)
+        return fn, (x, fs)
+    if kind == "chain":
+        sd, su = specs
+        down = tuple(tt_init(key, sd, zero_last=False))
+        up = tuple(tt_init(jax.random.key(2), su, zero_last=False))
+        fn = tt_adapter_kernel(sd, su, block_b, interpret)
+        return fn, (x, down, up)
+    if kind != "banked":
+        raise ValueError(f"unknown autotune kind {kind!r}")
+    sd, su = specs
+    down = tuple(
+        jnp.stack([jax.random.normal(jax.random.key(17 + j + a), shp,
+                                     jnp.float32) * 0.2
+                   for a in range(n_adapters)])
+        for j, shp in enumerate(sd.factor_shapes()))
+    up = tuple(
+        jnp.stack([jax.random.normal(jax.random.key(31 + j + a), shp,
+                                     jnp.float32) * 0.2
+                   for a in range(n_adapters)])
+        for j, shp in enumerate(su.factor_shapes()))
+    aid = jnp.arange(batch, dtype=jnp.int32) % n_adapters
+    sel = jax.nn.one_hot(aid, n_adapters, dtype=jnp.float32)
+    if bank_dtype == "int8":
+        from repro.fed.compress import quantize_leaf
+
+        def qbank(bank):
+            qs, ss = [], []
+            for f in bank:
+                pairs = [quantize_leaf(f[a]) for a in range(f.shape[0])]
+                qs.append(jnp.stack([q for q, _ in pairs]))
+                ss.append(jnp.stack([jnp.asarray(s, jnp.float32).reshape(())
+                                     for _, s in pairs]))
+            return tuple(qs), jnp.stack(ss)
+
+        dq, dsc = qbank(down)
+        uq, usc = qbank(up)
+        fn = tt_adapter_banked_int8_kernel(sd, su, n_adapters, block_b,
+                                           interpret)
+        return fn, (x, sel, dq, uq, dsc, usc)
+    fn = tt_adapter_banked_kernel(sd, su, n_adapters, block_b, interpret)
+    return fn, (x, sel, down, up)
+
+
+def _time_ms(fn, args, reps: int) -> float:
+    jfn = jax.jit(fn)
+    jax.block_until_ready(jfn(*args))           # compile + warm
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(jfn(*args))
+        best = min(best, time.perf_counter() - t0)
+    return 1e3 * best
+
+
+def measure(kind: str, specs: tuple, *, n_adapters: int = 0,
+            bank_dtype: str = "f32", batch: int = 4096, reps: int = 5,
+            allow_interpret: bool = False) -> dict:
+    """Time every VMEM-feasible candidate; return one cache entry.
+
+    On a non-compiled backend (CPU/interpret) this refuses to measure and
+    returns the explicit skip record instead -- unless ``allow_interpret``
+    (test machinery; the entry is then marked and ``lookup`` ignores it).
+    """
+    backend = jax.default_backend()
+    interpret = backend != "tpu"
+    if interpret and not allow_interpret:
+        return {"skipped": True, "reason": "interpret", "interpret": True,
+                "backend": backend, "block_b": None}
+    timings: dict[str, float] = {}
+    roofs: dict[str, float] = {}
+    for cand in ops._BLOCK_CANDIDATES:
+        b = max(batch - batch % cand, cand)
+        try:
+            fn, args = _build_case(kind, specs, cand, b, n_adapters,
+                                   bank_dtype, interpret)
+            t = _time_ms(fn, args, reps) * (batch / b)
+        except Exception as e:                   # VMEM overflow etc: infeasible
+            timings[str(cand)] = float("inf")
+            roofs[str(cand)] = float("nan")
+            continue
+        timings[str(cand)] = t
+        roofs[str(cand)] = roofline_ms(kind, specs, cand, batch,
+                                       n_adapters, bank_dtype)
+    best = min(timings, key=lambda k: timings[k])
+    if kind == "banked":
+        heur = ops._select_block_b_banked(n_adapters, *specs,
+                                          bank_dtype=bank_dtype)
+    else:
+        heur = ops._select_block_b(*specs)
+    return {"skipped": False, "backend": backend, "interpret": interpret,
+            "block_b": int(best), "batch": batch,
+            "timings_ms": {k: (None if v == float("inf") else round(v, 4))
+                           for k, v in timings.items()},
+            "roofline_ms": {k: (None if v != v else round(v, 6))
+                            for k, v in roofs.items()},
+            "heuristic_block_b": heur,
+            "heuristic_ms": (None if timings.get(str(heur),
+                                                 float("inf")) == float("inf")
+                             else round(timings[str(heur)], 4))}
+
+
+def tune(cases, *, batch: int = 4096, reps: int = 5,
+         allow_interpret: bool = False,
+         out: Path | None = None) -> dict[str, dict]:
+    """Measure a list of (kind, specs, n_adapters, bank_dtype) cases and
+    merge them into the cache.  Returns {signature: {backend: entry}}."""
+    backend = jax.default_backend()
+    entries: dict[str, dict] = {}
+    for kind, specs, n_adapters, bank_dtype in cases:
+        sig = spec_signature(kind, specs, n_adapters, bank_dtype)
+        entry = measure(kind, specs, n_adapters=n_adapters,
+                        bank_dtype=bank_dtype, batch=batch, reps=reps,
+                        allow_interpret=allow_interpret)
+        entries[sig] = {backend: entry}
+        status = (f"skip({entry['reason']})" if entry["skipped"]
+                  else f"block_b={entry['block_b']} "
+                       f"(heuristic {entry['heuristic_block_b']})")
+        print(f"# autotune {sig}: {status}")
+    save(entries, out)
+    return entries
+
+
+def default_cases(smoke: bool = False):
+    """The benched spec set: paper-shaped adapter chains + serving banks."""
+    pairs = [(768, 64)] if smoke else [(768, 64), (4096, 64)]
+    cases = []
+    for p, q in pairs:
+        sd, su = make_tt_spec(p, q, 5), make_tt_spec(q, p, 5)
+        cases.append(("chain", (sd,), 0, "f32"))
+        cases.append(("chain", (sd, su), 0, "f32"))
+        for bank_dtype in ("f32", "int8"):
+            cases.append(("banked", (sd, su), 4 if smoke else 8, bank_dtype))
+    return cases
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="small spec set / batch (CI bench-smoke job)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--reps", type=int, default=None)
+    ap.add_argument("--allow-interpret", action="store_true",
+                    help="measure even in interpret mode (entries are "
+                         "marked and never steer selection)")
+    ap.add_argument("--out", default=None,
+                    help=f"cache path (default REPRO_TT_AUTOTUNE_CACHE or "
+                         f"{_DEFAULT_CACHE})")
+    a = ap.parse_args(argv)
+    batch = a.batch if a.batch is not None else (512 if a.smoke else 4096)
+    reps = a.reps if a.reps is not None else (2 if a.smoke else 5)
+    out = Path(a.out) if a.out else None
+    entries = tune(default_cases(a.smoke), batch=batch, reps=reps,
+                   allow_interpret=a.allow_interpret, out=out)
+    path = out or cache_path()
+    n_skip = sum(1 for e in entries.values()
+                 for v in e.values() if v["skipped"])
+    print(f"# autotune: {len(entries)} specs ({n_skip} skipped) -> {path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -26,7 +26,8 @@ import jax.numpy as jnp
 
 from repro.core.tt import TTSpec
 from repro.kernels import ref
-from repro.kernels.tt_contract import (tt_adapter_banked_kernel,
+from repro.kernels.tt_contract import (tt_adapter_banked_int8_kernel,
+                                       tt_adapter_banked_kernel,
                                        tt_adapter_bwd_kernel,
                                        tt_adapter_kernel,
                                        tt_linear_bwd_kernel, tt_linear_kernel)
@@ -37,9 +38,27 @@ from repro.kernels.tt_contract import (tt_adapter_banked_kernel,
 _BLOCK_CANDIDATES = (512, 256, 128)
 _VMEM_BUDGET_BYTES = 6 * 2**20
 
+# Sticky process-level record: did this process ever BUILD a Pallas kernel in
+# interpret mode?  benchmarks/common.py::write_bench_json consults it so
+# interpret-mode (non-TPU-emulated) numbers can never land on a committed
+# BENCH_*.json trajectory path, whichever suite produced them.
+_INTERPRET_KERNELS_BUILT = False
+
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _note_built(interpret: bool) -> None:
+    global _INTERPRET_KERNELS_BUILT
+    if interpret:
+        _INTERPRET_KERNELS_BUILT = True
+
+
+def interpret_kernels_built() -> bool:
+    """True iff any Pallas kernel was instantiated in interpret mode in this
+    process (its timings are emulation artifacts, not perf numbers)."""
+    return _INTERPRET_KERNELS_BUILT
 
 
 def _use_ref_bwd() -> bool:
@@ -88,6 +107,17 @@ def _select_block_b(*specs: TTSpec) -> int:
     return _BLOCK_CANDIDATES[-1]
 
 
+def _autotuned_block(kind: str, specs: tuple, n_adapters: int = 0,
+                     bank_dtype: str = "f32"):
+    """Measured-cache consultation (priority below the env override, above
+    the static heuristic).  Lazy import: autotune imports this module."""
+    if os.environ.get("REPRO_TT_AUTOTUNE", "on").strip().lower() == "off":
+        return None
+    from repro.kernels import autotune
+    return autotune.lookup(kind, specs, n_adapters=n_adapters,
+                           bank_dtype=bank_dtype)
+
+
 def select_block_b(*specs: TTSpec) -> int:
     env = os.environ.get("REPRO_TT_BLOCK_B")
     if env:
@@ -98,33 +128,65 @@ def select_block_b(*specs: TTSpec) -> int:
         if block_b <= 0:
             raise ValueError(f"invalid REPRO_TT_BLOCK_B={env!r}: must be > 0")
         return block_b
+    tuned = _autotuned_block("chain", specs)
+    if tuned is not None:
+        return tuned
     return _select_block_b(*specs)
 
 
-def _check_bank_budget(n_adapters: int, *specs: TTSpec) -> int:
+def bank_bytes(n_adapters: int, *specs: TTSpec,
+               bank_dtype: str = "f32") -> int:
+    """VMEM bytes of an A-adapter resident factor bank.  f32: 4 bytes per
+    param.  int8: 1 byte per param plus one f32 scale per factor leaf per
+    adapter (quantize_leaf is per-tensor)."""
+    if bank_dtype == "f32":
+        return 4 * n_adapters * sum(s.n_params for s in specs)
+    if bank_dtype == "int8":
+        n_leaves = sum(s.order for s in specs)
+        return n_adapters * (sum(s.n_params for s in specs) + 4 * n_leaves)
+    raise ValueError(f"invalid bank_dtype={bank_dtype!r}: 'f32' or 'int8'")
+
+
+def max_bank_adapters(*specs: TTSpec, bank_dtype: str = "f32") -> int:
+    """Largest A whose bank still leaves room for the smallest block's
+    working set -- the paging ceiling bench_serve's capacity row reports."""
+    a = 0
+    while True:
+        try:
+            _check_bank_budget(a + 1, *specs, bank_dtype=bank_dtype)
+        except ValueError:
+            return a
+        a += 1
+
+
+def _check_bank_budget(n_adapters: int, *specs: TTSpec,
+                       bank_dtype: str = "f32") -> int:
     """VMEM bytes left after the whole (A, ...) bank goes resident; raises
     the actionable error when the bank ALONE blows the budget (no block size
     -- env-forced or not -- can help)."""
-    bank_bytes = 4 * n_adapters * sum(s.n_params for s in specs)
-    budget = _VMEM_BUDGET_BYTES - bank_bytes
+    bb = bank_bytes(n_adapters, *specs, bank_dtype=bank_dtype)
+    budget = _VMEM_BUDGET_BYTES - bb
     if budget <= 0:
         raise ValueError(
             f"adapter bank of {n_adapters} adapters "
-            f"({bank_bytes / 2**20:.1f} MiB of TT factors) does not fit the "
-            f"kernel VMEM budget ({_VMEM_BUDGET_BYTES / 2**20:.0f} MiB): "
+            f"({bb / 2**20:.1f} MiB of {bank_dtype} TT factors) does not fit "
+            f"the kernel VMEM budget ({_VMEM_BUDGET_BYTES / 2**20:.0f} MiB): "
             "page the bank (AdapterBank(max_resident=...)) or serve via the "
             "jnp path (use_kernel=False)")
     return budget
 
 
 @lru_cache(maxsize=None)
-def _select_block_b_banked(n_adapters: int, *specs: TTSpec) -> int:
+def _select_block_b_banked(n_adapters: int, *specs: TTSpec,
+                           bank_dtype: str = "f32") -> int:
     """Banked variant of the block table: the whole (A, ...) factor bank is
     VMEM-resident every grid step, and each batch row additionally holds its
     (A,) one-hot selector plus the per-row gathered factor matrices -- all
     A-dependent costs the plain table ignores.  Forward-only, so no x2 for
-    backward cotangent mirrors."""
-    budget = _check_bank_budget(n_adapters, *specs)
+    backward cotangent mirrors.  The per-row working set is dtype-independent:
+    the int8 kernel dequantizes into the same f32 gathered matrices; only the
+    resident bank shrinks 4x."""
+    budget = _check_bank_budget(n_adapters, *specs, bank_dtype=bank_dtype)
     per_row = (sum(_chain_row_floats(s) for s in specs) + n_adapters
                + sum(s.n_params for s in specs))
     for cand in _BLOCK_CANDIDATES:
@@ -134,32 +196,42 @@ def _select_block_b_banked(n_adapters: int, *specs: TTSpec) -> int:
     return _BLOCK_CANDIDATES[-1]
 
 
-def select_block_b_banked(n_adapters: int, *specs: TTSpec) -> int:
+def select_block_b_banked(n_adapters: int, *specs: TTSpec,
+                          bank_dtype: str = "f32") -> int:
     if os.environ.get("REPRO_TT_BLOCK_B"):
         # env forces the block size but never waives bank-fits-VMEM
-        _check_bank_budget(n_adapters, *specs)
+        _check_bank_budget(n_adapters, *specs, bank_dtype=bank_dtype)
         return select_block_b(*specs)
-    return _select_block_b_banked(n_adapters, *specs)
+    tuned = _autotuned_block("banked", specs, n_adapters=n_adapters,
+                             bank_dtype=bank_dtype)
+    if tuned is not None:
+        _check_bank_budget(n_adapters, *specs, bank_dtype=bank_dtype)
+        return tuned
+    return _select_block_b_banked(n_adapters, *specs, bank_dtype=bank_dtype)
 
 
 @lru_cache(maxsize=None)
 def _linear_call(spec: TTSpec, block_b: int, interpret: bool):
+    _note_built(interpret)
     return tt_linear_kernel(spec, block_b, interpret)
 
 
 @lru_cache(maxsize=None)
 def _linear_bwd_call(spec: TTSpec, block_b: int, interpret: bool):
+    _note_built(interpret)
     return tt_linear_bwd_kernel(spec, block_b, interpret)
 
 
 @lru_cache(maxsize=None)
 def _adapter_call(spec_down: TTSpec, spec_up: TTSpec, block_b: int, interpret: bool):
+    _note_built(interpret)
     return tt_adapter_kernel(spec_down, spec_up, block_b, interpret)
 
 
 @lru_cache(maxsize=None)
 def _adapter_bwd_call(spec_down: TTSpec, spec_up: TTSpec, block_b: int,
                       interpret: bool):
+    _note_built(interpret)
     return tt_adapter_bwd_kernel(spec_down, spec_up, block_b, interpret)
 
 
@@ -220,20 +292,43 @@ def tt_adapter_fused(down: Sequence[jax.Array], up: Sequence[jax.Array],
 @lru_cache(maxsize=None)
 def _adapter_banked_call(spec_down: TTSpec, spec_up: TTSpec, n_adapters: int,
                          block_b: int, interpret: bool):
+    _note_built(interpret)
     return tt_adapter_banked_kernel(spec_down, spec_up, n_adapters, block_b,
                                     interpret)
 
 
+@lru_cache(maxsize=None)
+def _adapter_banked_int8_call(spec_down: TTSpec, spec_up: TTSpec,
+                              n_adapters: int, block_b: int, interpret: bool):
+    _note_built(interpret)
+    return tt_adapter_banked_int8_kernel(spec_down, spec_up, n_adapters,
+                                         block_b, interpret)
+
+
 def tt_adapter_banked(down: Sequence[jax.Array], up: Sequence[jax.Array],
                       spec_down: TTSpec, spec_up: TTSpec, x: jax.Array,
-                      adapter_id: jax.Array) -> jax.Array:
+                      adapter_id: jax.Array, *,
+                      down_scales: Sequence[jax.Array] | None = None,
+                      up_scales: Sequence[jax.Array] | None = None,
+                      bank_dtype: str = "f32") -> jax.Array:
     """Multi-tenant fused adapter delta: per-row factor selection from a
     stacked bank (factors (A, ...); adapter_id (B,) indexes the leading batch
     axis of x).  Forward-only -- the bank is the frozen OUTPUT of federated
     fine-tuning, served, never trained (train-time code uses
     ``tt_adapter_fused``).  Padding rows get an all-zero selector, so their
-    chain -- and output -- is exactly zero before being dropped."""
+    chain -- and output -- is exactly zero before being dropped.
+
+    ``bank_dtype="int8"``: factors are int8 banks quantized with
+    ``fed/compress.py::quantize_leaf``'s per-tensor scheme and
+    ``down_scales``/``up_scales`` carry one (A,) f32 scale per factor leaf.
+    The kernel dequantizes on read by folding the selected row's scale into
+    the one-hot gather, so the f32 bank never materializes in VMEM."""
     down, up = tuple(down), tuple(up)
+    if bank_dtype not in ("f32", "int8"):
+        raise ValueError(f"invalid bank_dtype={bank_dtype!r}: 'f32' or 'int8'")
+    if bank_dtype == "int8" and (down_scales is None or up_scales is None):
+        raise ValueError("bank_dtype='int8' requires down_scales/up_scales "
+                         "(one (A,) f32 scale per factor leaf)")
     n_adapters = down[0].shape[0]
     batch_shape = x.shape[:-1]
     if not batch_shape or adapter_id.shape != (batch_shape[0],):
@@ -247,11 +342,18 @@ def tt_adapter_banked(down: Sequence[jax.Array], up: Sequence[jax.Array],
     sel = sel.reshape((batch_shape[0],) + (1,) * (len(batch_shape) - 1)
                       + (n_adapters,))
     sel = jnp.broadcast_to(sel, batch_shape + (n_adapters,))
-    block_b = select_block_b_banked(n_adapters, spec_down, spec_up)
+    block_b = select_block_b_banked(n_adapters, spec_down, spec_up,
+                                    bank_dtype=bank_dtype)
     xf, _, b = _flatten_pad(x, spec_down.in_dim, block_b)
     sf, _, _ = _flatten_pad(sel, n_adapters, block_b)
-    y = _adapter_banked_call(spec_down, spec_up, n_adapters, block_b,
-                             _interpret())(xf, sf, down, up)
+    if bank_dtype == "int8":
+        ds = jnp.stack([jnp.asarray(s, jnp.float32) for s in down_scales])
+        us = jnp.stack([jnp.asarray(s, jnp.float32) for s in up_scales])
+        y = _adapter_banked_int8_call(spec_down, spec_up, n_adapters, block_b,
+                                      _interpret())(xf, sf, down, up, ds, us)
+    else:
+        y = _adapter_banked_call(spec_down, spec_up, n_adapters, block_b,
+                                 _interpret())(xf, sf, down, up)
     return y[:b].reshape(batch_shape + (spec_up.out_dim,))
 
 

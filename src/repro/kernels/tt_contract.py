@@ -212,7 +212,7 @@ def tt_adapter_kernel(spec_down: TTSpec, spec_up: TTSpec, block_b: int,
 # ---------------------------------------------------------------------------
 
 
-def tt_chain_fwd_banked(x, sel, factors: list, spec: TTSpec):
+def tt_chain_fwd_banked(x, sel, factors: list, spec: TTSpec, scales=None):
     """Per-row banked contraction chain.
 
     factors[j]: (A, r_in, k_j, r_out) -- the whole adapter bank stacked on a
@@ -222,20 +222,29 @@ def tt_chain_fwd_banked(x, sel, factors: list, spec: TTSpec):
     (the bank is tiny -- rank-5 TT factors -- so this gather-as-GEMM costs
     less than a single fold step), then runs the fold/expand as a batched
     rank-3 contraction over the row dimension.
+
+    With ``scales`` (a (J, A) f32 array -- one ``quantize_leaf`` scale per
+    (factor, adapter)) the factor bank is int8: dequantize-on-read happens
+    INSIDE the selection GEMM by folding the selected adapter's scale into
+    the one-hot selector (``(sel * scales[j]) @ q.astype(f32)`` equals
+    ``scale[row] * q[row]`` exactly for a one-hot row), so the f32 bank is
+    never materialized -- only the per-row gathered matrices are, exactly as
+    in the f32 path.  Padding rows keep an all-zero selector and stay zero.
     """
     tb = x.shape[0]
     a = spec.split
     in_dims = spec.core_dims[:a]
 
-    def select(g):
+    def select(g, j):
         A = g.shape[0]
-        gb = jnp.dot(sel, g.reshape((A, -1)),
+        s = sel if scales is None else sel * scales[j]
+        gb = jnp.dot(s, g.reshape((A, -1)).astype(jnp.float32),
                      preferred_element_type=jnp.float32)
         return gb.reshape((tb,) + g.shape[1:])             # (TB, r_in, k, r_out)
 
     t = x.reshape((tb, 1) + tuple(in_dims))               # (TB, r0=1, k_1..k_a)
     for j in range(a):
-        gb = select(factors[j])
+        gb = select(factors[j], j)
         _, r_in, k, r_out = gb.shape
         rest = math.prod(in_dims[j + 1:]) if j + 1 < a else 1
         lhs = t.reshape((tb, r_in, k, rest)).transpose((0, 3, 1, 2))
@@ -247,7 +256,7 @@ def tt_chain_fwd_banked(x, sel, factors: list, spec: TTSpec):
     t = t.reshape((tb, 1, factors[a - 1].shape[-1]))      # (TB, 1, r_a)
 
     for j in range(a, spec.order):
-        gb = select(factors[j])
+        gb = select(factors[j], j)
         _, r_in, k, r_out = gb.shape
         pre = t.shape[1]
         t = jax.lax.dot_general(t, gb.reshape((tb, r_in, k * r_out)),
@@ -302,6 +311,67 @@ def tt_adapter_banked_kernel(spec_down: TTSpec, spec_up: TTSpec,
             out_shape=jax.ShapeDtypeStruct((b, spec_up.out_dim), x.dtype),
             interpret=interpret,
         )(x, sel, *down, *up)
+
+    return call
+
+
+def tt_adapter_banked_int8_kernel(spec_down: TTSpec, spec_up: TTSpec,
+                                  n_adapters: int, block_b: int,
+                                  interpret: bool):
+    """int8 bank-resident variant of :func:`tt_adapter_banked_kernel`.
+
+    The factor bank lives in VMEM as int8 payloads plus one f32 scale per
+    (factor, adapter) -- the ``fed/compress.py::quantize_leaf`` scheme, so
+    the uplink channel's ``error_bound`` math transfers to the bank
+    unchanged.  At 1 byte/param (+4 B/tensor of scales) the resident bank
+    costs ~1/4 of the f32 stack, which is what lets ``select_block_b_banked``
+    hold >= 2x the adapters before paging (DESIGN.md §2).  Dequantization
+    happens on read, inside the selection GEMM of each chain step
+    (``tt_chain_fwd_banked`` with ``scales``); activations, intermediates,
+    and the output stay f32 -- only the resident weights are quantized.
+
+    Scales arrive stacked as two (J, A) f32 arrays (down / up chains), both
+    whole-array VMEM-resident like the factors.
+    """
+    n_down = spec_down.order
+    n_up = spec_up.order
+
+    def kernel(*refs):
+        x_ref, s_ref = refs[0], refs[1]
+        d_refs = refs[2:2 + n_down]
+        u_refs = refs[2 + n_down:2 + n_down + n_up]
+        ds_ref, us_ref = refs[2 + n_down + n_up], refs[3 + n_down + n_up]
+        o_ref = refs[-1]
+        x = x_ref[...]
+        sel = s_ref[...]
+        h = tt_chain_fwd_banked(x, sel, [f[...] for f in d_refs], spec_down,
+                                scales=ds_ref[...])
+        h = jax.nn.gelu(h.astype(jnp.float32))
+        y = tt_chain_fwd_banked(h.astype(x.dtype), sel,
+                                [f[...] for f in u_refs], spec_up,
+                                scales=us_ref[...])
+        o_ref[...] = y.astype(o_ref.dtype)
+
+    def call(x: jax.Array, sel: jax.Array, down: Sequence[jax.Array],
+             up: Sequence[jax.Array], down_scales: jax.Array,
+             up_scales: jax.Array) -> jax.Array:
+        b = x.shape[0]
+        assert b % block_b == 0, (b, block_b)
+        grid = (b // block_b,)
+        in_specs = [pl.BlockSpec((block_b, spec_down.in_dim), lambda i: (i, 0)),
+                    pl.BlockSpec((block_b, n_adapters), lambda i: (i, 0))]
+        for f in list(down) + list(up):
+            in_specs.append(pl.BlockSpec(f.shape, lambda i, n=f.ndim: (0,) * n))
+        for s in (down_scales, up_scales):
+            in_specs.append(pl.BlockSpec(s.shape, lambda i: (0, 0)))
+        return pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((block_b, spec_up.out_dim), lambda i: (i, 0)),
+            out_shape=jax.ShapeDtypeStruct((b, spec_up.out_dim), x.dtype),
+            interpret=interpret,
+        )(x, sel, *down, *up, down_scales, up_scales)
 
     return call
 

@@ -263,7 +263,8 @@ def analyze_hlo(text: str) -> HloCosts:
                          for nm in _OPERAND_RE.findall(operand_part))
                 hbm += count * (ob + ib)
 
-    weighted = sum(v * (2 if k == "all-reduce" else 1) for k, v in coll.items())
+    from repro.launch.roofline import COLLECTIVE_WEIGHTS
+    weighted = sum(v * COLLECTIVE_WEIGHTS.get(k, 1) for k, v in coll.items())
     return HloCosts(flops=flops, hbm_bytes=hbm, coll_bytes=weighted,
                     coll_breakdown={k: int(v) for k, v in coll.items()},
                     n_while=n_while, trip_counts=sorted(trip_counts)[-12:])

@@ -33,6 +33,13 @@ _DTYPE_BYTES = {
 _COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
                 "collective-permute")
 
+# An all-reduce moves each byte twice on a ring (reduce-scatter + all-gather
+# phases); every other collective kind moves it once.  Applied by
+# ``weighted_collective_bytes`` here and by ``hlo_analysis.analyze_hlo`` (the
+# accounting path ``analyze`` actually uses) -- pinned against each other in
+# tests/test_substrate.py.
+COLLECTIVE_WEIGHTS = {"all-reduce": 2}
+
 # e.g. "bf16[16,4096,128]{2,1,0}" -> dtype, dims
 _SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
 
@@ -51,7 +58,11 @@ def _shape_bytes(shape_str: str) -> int:
 
 
 def collective_bytes(hlo_text: str) -> dict[str, int]:
-    """Sum output-shape bytes per collective kind from optimized HLO."""
+    """Sum output-shape bytes per collective kind from optimized HLO.
+
+    RAW per-kind totals -- the ring weighting (all-reduce x2) is NOT applied
+    here; use :func:`weighted_collective_bytes` for the roofline's
+    collective-seconds numerator."""
     out = {k: 0 for k in _COLLECTIVES}
     for line in hlo_text.splitlines():
         stripped = line.strip()
@@ -65,6 +76,16 @@ def collective_bytes(hlo_text: str) -> dict[str, int]:
             continue
         out[kind] += _shape_bytes(m.group(1))
     return out
+
+
+def weighted_collective_bytes(hlo_text: str) -> int:
+    """Ring-weighted collective bytes: all-reduce counted twice
+    (reduce-scatter + all-gather phases), everything else once -- the figure
+    the module docstring promises and ``Roofline.t_collective`` divides by
+    ICI bandwidth.  Matches ``hlo_analysis.analyze_hlo``'s weighting (the
+    path :func:`analyze` uses) on HLO without loops."""
+    return sum(v * COLLECTIVE_WEIGHTS.get(k, 1)
+               for k, v in collective_bytes(hlo_text).items())
 
 
 @dataclasses.dataclass

@@ -22,6 +22,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.fed.compress import INT8_MAX
+
+
+def _quantize_stack(h: np.ndarray):
+    """(N, L, ...) f32 -> (int8 payload, (N, L) f32 scales), one scale per
+    (adapter, layer) leaf slice -- ``fed/compress.py::quantize_leaf``'s
+    per-tensor scheme vectorized over the bank/layer axes, so the uplink
+    channel's error_bound math (max|x| / 254 per leaf) transfers."""
+    axes = tuple(range(2, h.ndim))
+    scale = np.maximum(np.max(np.abs(h), axis=axes), 1e-12) / INT8_MAX
+    sb = scale.reshape(scale.shape + (1,) * (h.ndim - 2))
+    q = np.clip(np.round(h / sb), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float32)
+
 
 def _peft_blocks(adapter: dict) -> dict:
     """Extract + validate the banked-servable block pytree from a peft dict
@@ -53,15 +67,25 @@ class AdapterBank:
     row serving that adapter, paging it in (and bumping ``page_ins``) when
     absent.  The engine passes resident rows -- not adapter ids -- into the
     jitted step, so paging never changes traced shapes.
+
+    ``quantize=True`` stores the DEVICE stack int8: factor leaves become
+    int8 payloads and each per-block dict gains parallel ``down_scale`` /
+    ``up_scale`` lists of (R, L) f32 scales (one per factor leaf, the
+    ``quantize_leaf`` scheme).  The host copy stays f32 -- quantization
+    happens at page-in -- so residency costs ~1/4 the bytes and the same
+    VMEM budget holds >= 2x the adapters (``ops.max_bank_adapters``), at a
+    decode error bounded by :meth:`error_bound`.
     """
 
-    def __init__(self, adapters: list, max_resident: int | None = None):
+    def __init__(self, adapters: list, max_resident: int | None = None,
+                 quantize: bool = False):
         if not adapters:
             raise ValueError("empty adapter list")
         blocks = [_peft_blocks(a) for a in adapters]
         host = jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
                             *blocks)                       # leaves (A, L, ...)
         self.n_adapters = len(blocks)
+        self.quantize = bool(quantize)
         self.max_resident = (self.n_adapters if max_resident is None
                              else int(max_resident))
         if not 0 < self.max_resident <= self.n_adapters:
@@ -69,16 +93,40 @@ class AdapterBank:
                              f"(1..{self.n_adapters})")
         self.page_ins = 0
         self.page_in_batches = 0
-        if self.max_resident == self.n_adapters:
+        if self.max_resident == self.n_adapters and not self.quantize:
             self._host = None                              # fully resident
             self.blocks = jax.tree.map(jnp.asarray, host)
+        elif self.max_resident == self.n_adapters:
+            self._host = None
+            self.blocks = self._to_device(host)
         else:
             self._host = host
-            self.blocks = jax.tree.map(
-                lambda h: jnp.asarray(h[: self.max_resident]), host)
+            self.blocks = self._to_device(
+                jax.tree.map(lambda h: h[: self.max_resident], host))
         #: resident row -> adapter id, in LRU order bookkeeping below
         self._resident = list(range(self.max_resident))
         self._lru = list(range(self.max_resident))         # front = LRU row
+
+    def _to_device(self, host_rows: dict) -> dict:
+        """Host rows (N, L, ...) f32 -> device-structured stack.  Quantized
+        banks get int8 factor leaves plus ``*_scale`` (N, L) lists; the
+        result's tree structure matches ``self.blocks``, so page-in updates
+        stay a plain two-tree ``tree.map``."""
+        if not self.quantize:
+            return jax.tree.map(jnp.asarray, host_rows)
+        out = {}
+        for name, blk in host_rows.items():
+            nb = {}
+            for side in ("down", "up"):
+                qs, ss = [], []
+                for leaf in blk[side]:
+                    q, s = _quantize_stack(np.asarray(leaf))
+                    qs.append(jnp.asarray(q))
+                    ss.append(jnp.asarray(s))
+                nb[side] = qs
+                nb[side + "_scale"] = ss
+            out[name] = nb
+        return out
 
     # ------------------------------------------------------------------
     @property
@@ -93,6 +141,20 @@ class AdapterBank:
 
     def resident_adapters(self) -> list:
         return list(self._resident)
+
+    def error_bound(self) -> float:
+        """Worst-case |dequantized - stored| over every resident factor
+        element: round-to-nearest int8 with a max/127 scale decodes within
+        scale/2 -- the same figure ``Int8DeltaChannel.error_bound`` reports
+        for the uplink (max|x| / 254 per leaf).  0.0 for an f32 bank."""
+        if not self.quantize:
+            return 0.0
+        worst = 0.0
+        for blk in self.blocks.values():
+            for side in ("down_scale", "up_scale"):
+                for s in blk[side]:
+                    worst = max(worst, float(jnp.max(s)) / 2.0)
+        return worst
 
     # ------------------------------------------------------------------
     def _touch(self, row: int) -> None:
@@ -118,9 +180,10 @@ class AdapterBank:
         if not victims:
             return None
         row = victims[0]
-        self.blocks = jax.tree.map(
-            lambda d, h: d.at[row].set(jnp.asarray(h[adapter_id])),
-            self.blocks, self._host)
+        new = self._to_device(
+            jax.tree.map(lambda h: h[adapter_id:adapter_id + 1], self._host))
+        self.blocks = jax.tree.map(lambda d, n: d.at[row].set(n[0]),
+                                   self.blocks, new)
         self._resident[row] = adapter_id
         self._touch(row)
         self.page_ins += 1
@@ -175,10 +238,10 @@ class AdapterBank:
             rows.append(row)
         if page_rows:
             ridx = jnp.asarray(page_rows, jnp.int32)
-            self.blocks = jax.tree.map(
-                lambda d, h: d.at[ridx].set(
-                    jnp.asarray(h[np.asarray(page_adapters)])),
-                self.blocks, self._host)
+            new = self._to_device(jax.tree.map(
+                lambda h: h[np.asarray(page_adapters)], self._host))
+            self.blocks = jax.tree.map(lambda d, n: d.at[ridx].set(n),
+                                       self.blocks, new)
             self.page_ins += len(page_rows)
             self.page_in_batches += 1
         self._resident = resident
@@ -186,21 +249,22 @@ class AdapterBank:
 
     # ------------------------------------------------------------------
     @classmethod
-    def from_fed_results(cls, results, max_resident: int | None = None
-                         ) -> "AdapterBank":
+    def from_fed_results(cls, results, max_resident: int | None = None,
+                         quantize: bool = False) -> "AdapterBank":
         """fed -> serve export: bank the aggregated adapters of N federated
         runs (one :class:`repro.fed.api.FedResult` per tenant/silo)."""
         return cls([r.export_adapter() for r in results],
-                   max_resident=max_resident)
+                   max_resident=max_resident, quantize=quantize)
 
     @classmethod
     def from_checkpoints(cls, paths, like: dict,
-                         max_resident: int | None = None) -> "AdapterBank":
+                         max_resident: int | None = None,
+                         quantize: bool = False) -> "AdapterBank":
         """Bank adapters from npz checkpoints of per-tenant peft pytrees
         (``train/checkpoint.py``); ``like`` gives the pytree structure."""
         from repro.train import checkpoint
         return cls([checkpoint.restore(p, like) for p in paths],
-                   max_resident=max_resident)
+                   max_resident=max_resident, quantize=quantize)
 
 
 __all__ = ["AdapterBank"]

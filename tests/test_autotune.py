@@ -1,0 +1,177 @@
+"""Measured block autotuner: cache round-trip, selector priority, and the
+interpret-mode refusal contract.
+
+Priority pinned here for BOTH selectors (select_block_b /
+select_block_b_banked): REPRO_TT_BLOCK_B env override > cache entry for
+(signature, backend) > static VMEM heuristic.  The env override never waives
+the bank-fits-VMEM check, and interpret-mode measurements never steer block
+selection (they persist only as marked entries / explicit skip records).
+"""
+
+import json
+
+import jax
+import pytest
+
+from repro.core.tt import make_tt_spec
+from repro.kernels import autotune, ops
+
+SD, SU = make_tt_spec(256, 64, 5), make_tt_spec(64, 256, 5)
+BACKEND = jax.default_backend()
+
+
+@pytest.fixture()
+def tmp_cache(tmp_path, monkeypatch):
+    path = tmp_path / "tt_autotune.json"
+    monkeypatch.setenv("REPRO_TT_AUTOTUNE_CACHE", str(path))
+    monkeypatch.delenv("REPRO_TT_BLOCK_B", raising=False)
+    monkeypatch.delenv("REPRO_TT_AUTOTUNE", raising=False)
+    return path
+
+
+def _compiled_entry(block_b):
+    """What a TPU measurement run would have persisted."""
+    return {"skipped": False, "backend": BACKEND, "interpret": False,
+            "block_b": block_b, "batch": 4096}
+
+
+def test_signature_stable_and_distinct():
+    sig = autotune.spec_signature("chain", (SD, SU))
+    assert sig == autotune.spec_signature("chain", (SD, SU))
+    assert sig != autotune.spec_signature("chain", (SD,))
+    b8 = autotune.spec_signature("banked", (SD, SU), 8, "int8")
+    assert b8 != autotune.spec_signature("banked", (SD, SU), 8, "f32")
+    assert b8 != autotune.spec_signature("banked", (SD, SU), 4, "int8")
+    assert "A8.int8" in b8
+
+
+def test_save_lookup_roundtrip_steers_both_selectors(tmp_cache):
+    """A compiled-backend cache entry round-trips through save -> lookup and
+    overrides the static heuristic in select_block_b AND the banked
+    selector; absent signatures still return None."""
+    heur = ops._select_block_b(SD, SU)
+    forced = 128 if heur != 128 else 256
+    autotune.save({autotune.spec_signature("chain", (SD, SU)):
+                   {BACKEND: _compiled_entry(forced)},
+                   autotune.spec_signature("banked", (SD, SU), 4, "int8"):
+                   {BACKEND: _compiled_entry(forced)}})
+    assert autotune.lookup("chain", (SD, SU)) == forced
+    assert autotune.lookup("chain", (SD,)) is None          # not measured
+    assert ops.select_block_b(SD, SU) == forced
+    assert ops.select_block_b_banked(4, SD, SU, bank_dtype="int8") == forced
+    # un-cached banked geometry falls back to the heuristic
+    assert (ops.select_block_b_banked(4, SD, SU) ==
+            ops._select_block_b_banked(4, SD, SU))
+
+
+def test_save_merges_entries(tmp_cache):
+    sig1 = autotune.spec_signature("chain", (SD,))
+    sig2 = autotune.spec_signature("chain", (SD, SU))
+    autotune.save({sig1: {BACKEND: _compiled_entry(512)}})
+    autotune.save({sig2: {BACKEND: _compiled_entry(128)}})
+    data = json.loads(tmp_cache.read_text())
+    assert data["version"] == autotune.CACHE_VERSION
+    assert sig1 in data["entries"] and sig2 in data["entries"]
+    assert autotune.lookup("chain", (SD,)) == 512
+    assert autotune.lookup("chain", (SD, SU)) == 128
+
+
+def test_interpret_entries_and_skips_never_steer(tmp_cache):
+    sig = autotune.spec_signature("chain", (SD, SU))
+    autotune.save({sig: {BACKEND: {"skipped": False, "backend": BACKEND,
+                                   "interpret": True, "block_b": 128}}})
+    assert autotune.lookup("chain", (SD, SU)) is None
+    autotune.save({sig: {BACKEND: {"skipped": True, "reason": "interpret",
+                                   "interpret": True, "backend": BACKEND,
+                                   "block_b": None}}})
+    assert autotune.lookup("chain", (SD, SU)) is None
+    assert ops.select_block_b(SD, SU) == ops._select_block_b(SD, SU)
+
+
+def test_env_block_override_beats_cache_and_enforces_budget(tmp_cache,
+                                                           monkeypatch):
+    """REPRO_TT_BLOCK_B wins over a cache entry on both selector paths --
+    but an over-budget bank still raises: the override picks the block, it
+    never waives bank-fits-VMEM."""
+    autotune.save({autotune.spec_signature("chain", (SD, SU)):
+                   {BACKEND: _compiled_entry(512)},
+                   autotune.spec_signature("banked", (SD, SU), 4, "f32"):
+                   {BACKEND: _compiled_entry(512)}})
+    monkeypatch.setenv("REPRO_TT_BLOCK_B", "128")
+    assert ops.select_block_b(SD, SU) == 128
+    assert ops.select_block_b_banked(4, SD, SU) == 128
+    with pytest.raises(ValueError, match="does not fit"):
+        ops.select_block_b_banked(100_000, SD, SU)
+    with pytest.raises(ValueError, match="does not fit"):
+        ops.select_block_b_banked(400_000, SD, SU, bank_dtype="int8")
+
+
+def test_autotune_off_disables_cache_consultation(tmp_cache, monkeypatch):
+    autotune.save({autotune.spec_signature("chain", (SD, SU)):
+                   {BACKEND: _compiled_entry(128)}})
+    monkeypatch.setenv("REPRO_TT_AUTOTUNE", "off")
+    assert ops.select_block_b(SD, SU) == ops._select_block_b(SD, SU)
+    assert (ops.select_block_b_banked(4, SD, SU) ==
+            ops._select_block_b_banked(4, SD, SU))
+
+
+def test_measure_refuses_interpret_with_skip_record(tmp_cache):
+    """Off-TPU, measure() must not time emulation: it returns the explicit
+    skip record the CI artifact documents."""
+    if BACKEND == "tpu":
+        pytest.skip("compiled backend: measurement is legitimate here")
+    entry = autotune.measure("chain", (SD,), batch=128, reps=1)
+    assert entry == {"skipped": True, "reason": "interpret",
+                     "interpret": True, "backend": BACKEND, "block_b": None}
+    autotune.save({autotune.spec_signature("chain", (SD,)): {BACKEND: entry}})
+    assert autotune.lookup("chain", (SD,)) is None
+
+
+def test_measure_allow_interpret_deterministic_and_marked(tmp_cache):
+    """The test-machinery escape hatch: allow_interpret entries carry full
+    timing metadata, pick the same block on repeat runs (deterministic
+    inputs), are marked interpret off-TPU, and never steer lookup."""
+    e1 = autotune.measure("banked", (SD, SU), n_adapters=4, bank_dtype="int8",
+                          batch=128, reps=1, allow_interpret=True)
+    e2 = autotune.measure("banked", (SD, SU), n_adapters=4, bank_dtype="int8",
+                          batch=128, reps=1, allow_interpret=True)
+    assert not e1["skipped"]
+    assert set(e1["timings_ms"]) == {str(c) for c in ops._BLOCK_CANDIDATES}
+    assert e1["block_b"] in ops._BLOCK_CANDIDATES
+    assert e1["heuristic_block_b"] == ops._select_block_b_banked(
+        4, SD, SU, bank_dtype="int8")
+    assert set(e1["roofline_ms"]) == set(e1["timings_ms"])
+    assert e1["block_b"] == e2["block_b"]
+    sig = autotune.spec_signature("banked", (SD, SU), 4, "int8")
+    autotune.save({sig: {BACKEND: e1}})
+    if BACKEND != "tpu":
+        assert e1["interpret"]
+        assert autotune.lookup("banked", (SD, SU), n_adapters=4,
+                               bank_dtype="int8") is None
+
+
+def test_roofline_prediction_rewards_bank_amortization():
+    """The analytic model the measurements are compared against: a larger
+    block re-reads the resident bank fewer times, so predicted ms is
+    monotone nonincreasing in block_b, and the int8 bank's smaller
+    residency never predicts slower than f32."""
+    for dtype in ("f32", "int8"):
+        ms = [autotune.roofline_ms("banked", (SD, SU), b, 4096, 8, dtype)
+              for b in sorted(ops._BLOCK_CANDIDATES)]
+        assert ms == sorted(ms, reverse=True)
+    assert (autotune.roofline_ms("banked", (SD, SU), 128, 4096, 8, "int8")
+            <= autotune.roofline_ms("banked", (SD, SU), 128, 4096, 8, "f32"))
+
+
+def test_cli_smoke_writes_artifact(tmp_cache):
+    """The CI bench-smoke invocation end-to-end: every default smoke case
+    lands in the cache file (as explicit skips off-TPU)."""
+    autotune.main(["--smoke", "--batch", "64", "--reps", "1"])
+    data = json.loads(tmp_cache.read_text())
+    cases = autotune.default_cases(smoke=True)
+    assert len(data["entries"]) == len(cases)
+    for kind, specs, n_adapters, bank_dtype in cases:
+        sig = autotune.spec_signature(kind, specs, n_adapters, bank_dtype)
+        entry = data["entries"][sig][BACKEND]
+        if BACKEND != "tpu":
+            assert entry["skipped"] and entry["reason"] == "interpret"

@@ -56,3 +56,24 @@ def test_smoke_benches_upload_their_artifacts():
 def test_registered_suites_are_callable():
     for name, fn in bench_run.SUITES.items():
         assert callable(fn), f"suite {name!r} is not callable"
+
+
+def test_no_tracked_smoke_outputs():
+    """``*.smoke.json`` outputs are CI artifacts, never committed (the PR 2
+    bench-trajectory contract -- PR 7 committed BENCH_async.smoke.json
+    against it, and this guard makes the recurrence structural)."""
+    import subprocess
+    tracked = subprocess.run(
+        ["git", "ls-files", "BENCH_*.smoke.json", "*.smoke.json"],
+        cwd=REPO, capture_output=True, text=True)
+    if tracked.returncode != 0:        # not a git checkout (sdist, export)
+        return
+    files = [f for f in tracked.stdout.splitlines() if f]
+    assert not files, (
+        f"smoke outputs are CI artifacts and must not be tracked: {files} "
+        "(git rm --cached them; .gitignore already excludes the pattern)")
+
+
+def test_gitignore_excludes_smoke_outputs():
+    gi = (REPO / ".gitignore").read_text()
+    assert "BENCH_*.smoke.json" in gi

@@ -279,3 +279,51 @@ def test_fed_export_checkpoint_roundtrip_serves_identically(tmp_path):
         return {r.uid: g for r, g in engine.finished}
 
     assert decode(mem_bank) == decode(ckpt_bank)
+
+
+# ---------------------------------------------------------------------------
+# int8 quantized banks (quantize at page-in; host copy stays f32)
+# ---------------------------------------------------------------------------
+
+def _quantized_serve(pefts, reqs, quantize, max_resident=None):
+    bank = AdapterBank(pefts, max_resident=max_resident, quantize=quantize)
+    engine = ServeEngine(CFG, {"backbone": _BACKBONE}, batch_slots=2,
+                         max_len=64, seed=0, bank=bank)
+    for a, n in reqs:
+        engine.submit(Request(prompt=PROBE, max_new_tokens=n, adapter=a))
+    engine.run_until_done()
+    return {r.uid: g for r, g in engine.finished}, engine.bank
+
+
+def test_quantized_bank_token_parity():
+    """quantize=True serves the same greedy tokens as the f32 bank (the int8
+    decode error -- bank.error_bound(), ~max|factor|/254 -- sits far below
+    the argmax margin at these scales), and the residency footprint drops by
+    more than 3x."""
+    pefts = [_perturbed_peft(s) for s in (21, 22, 23, 24)]
+    reqs = [(0, 6), (1, 6), (2, 6), (3, 6), (1, 6)]
+    f32_g, f32_bank = _quantized_serve(pefts, reqs, quantize=False)
+    q_g, q_bank = _quantized_serve(pefts, reqs, quantize=True)
+    assert f32_g == q_g, "int8 bank changed served tokens"
+    assert f32_bank.error_bound() == 0.0
+    assert q_bank.error_bound() > 0.0
+    assert q_bank.nbytes_resident * 3 < f32_bank.nbytes_resident
+    # payloads really are int8 stacks with parallel f32 scale leaves
+    for blk in q_bank.blocks.values():
+        for side in ("down", "up"):
+            assert all(q.dtype == jnp.int8 for q in blk[side])
+            assert all(s.dtype == jnp.float32 for s in blk[side + "_scale"])
+            assert len(blk[side]) == len(blk[side + "_scale"])
+
+
+def test_quantized_bank_paging_parity():
+    """Paging a quantized bank (page-in re-quantizes from the f32 host copy)
+    must serve the same tokens as the fully-resident quantized bank."""
+    pefts = [_perturbed_peft(s) for s in (31, 32, 33, 34)]
+    reqs = [(0, 6), (1, 6), (2, 6), (3, 6), (0, 6)]
+    full_g, full_bank = _quantized_serve(pefts, reqs, quantize=True)
+    paged_g, paged_bank = _quantized_serve(pefts, reqs, quantize=True,
+                                           max_resident=2)
+    assert full_g == paged_g, "paging a quantized bank changed served tokens"
+    assert paged_bank.paged and paged_bank.page_ins > 0
+    assert paged_bank.quantize and len(paged_bank.resident_adapters()) == 2

@@ -128,3 +128,37 @@ def test_hlo_collective_bytes():
     c = jax.jit(f).lower(jnp.zeros((64, 64), jnp.float32)).compile()
     r = analyze_hlo(c.as_text())
     assert r.coll_breakdown["all-reduce"] == 64 * 64 * 4
+    # the aggregate applies the ring weighting the roofline docstring
+    # promises: all-reduce bytes count twice (reduce-scatter + all-gather)
+    assert r.coll_bytes == 2 * 64 * 64 * 4
+
+
+_SYNTH_HLO = """\
+ENTRY %main (p0: f32[64,64]) -> (f32[64,64], f32[32,64], f32[16,16]) {
+  %p0 = f32[64,64]{1,0} parameter(0)
+  %ar = f32[64,64]{1,0} all-reduce(%p0), replica_groups={}, to_apply=%add
+  %ag = f32[32,64]{1,0} all-gather(%p0), dimensions={0}
+  %cp = f32[16,16]{1,0} collective-permute(%p0)
+  ROOT %t = tuple(%ar, %ag, %cp)
+}
+"""
+
+
+def test_roofline_collective_weighting_synthetic():
+    """Pin the all-reduce x2 ring weight on a synthetic HLO snippet:
+    ``collective_bytes`` stays the RAW per-kind breakdown while
+    ``weighted_collective_bytes`` applies the weight the module docstring
+    promises -- and agrees with hlo_analysis (the path ``analyze`` uses)."""
+    from repro.launch.hlo_analysis import analyze_hlo
+    from repro.launch.roofline import (COLLECTIVE_WEIGHTS, collective_bytes,
+                                       weighted_collective_bytes)
+    ar, ag, cp = 64 * 64 * 4, 32 * 64 * 4, 16 * 16 * 4
+    raw = collective_bytes(_SYNTH_HLO)
+    assert raw["all-reduce"] == ar
+    assert raw["all-gather"] == ag
+    assert raw["collective-permute"] == cp
+    assert COLLECTIVE_WEIGHTS == {"all-reduce": 2}
+    assert weighted_collective_bytes(_SYNTH_HLO) == 2 * ar + ag + cp
+    h = analyze_hlo(_SYNTH_HLO)
+    assert h.coll_bytes == weighted_collective_bytes(_SYNTH_HLO)
+    assert h.coll_breakdown["all-reduce"] == raw["all-reduce"]
